@@ -1,0 +1,93 @@
+"""Calibrate the vector-engine timing model against the paper's §5 anchors.
+
+Free parameters:
+  * global scalar FU-class latencies (effective ns-per-instruction classes)
+  * per-app scalar CPI multiplier (the paper measures each app's scalar
+    baseline in gem5; we fit the equivalent — documented in EXPERIMENTS.md)
+
+The vector-side microarchitecture constants (pipe depths, element throughput,
+start-up reads) stay FIXED at the paper's §3 description; only the scalar
+baseline is fitted.  Outputs the constants to paste into core/engine.py /
+core/suite.py and the anchor table for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core import engine as eng
+from repro.core import suite, tracegen
+
+# (app, mvl, lanes, paper_speedup, kind)  kind: "eq" exact anchor, "lt"/"gt"
+ANCHORS = [
+    ("blackscholes", 8, 1, 2.22, "eq"),
+    ("jacobi-2d", 8, 1, 1.79, "eq"),
+    ("jacobi-2d", 256, 1, 2.99, "eq"),
+    ("canneal", 16, 1, 1.64, "eq"),
+    ("canneal", 16, 8, 1.88, "eq"),
+    ("canneal", 256, 1, 1.0, "lt"),
+    ("particlefilter", 8, 1, 1.0, "lt"),
+    ("particlefilter", 256, 8, 1.0, "lt"),
+    ("pathfinder", 8, 1, 1.8, "eq"),
+    ("streamcluster", 8, 1, 1.68, "eq"),
+    ("swaptions", 8, 1, 1.03, "eq"),
+]
+
+
+def speedups(scalar_mult):
+    # fit from scratch: neutralize the baked-in multipliers
+    suite.SCALAR_BASELINE_MULT = {a: 1.0 for a in tracegen.APPS}
+    out = []
+    for app, mvl, lanes, target, kind in ANCHORS:
+        cfg = eng.VectorEngineConfig(mvl=mvl, lanes=lanes)
+        s = suite.scalar_runtime_ns(app) * scalar_mult.get(app, 1.0)
+        v = suite.vector_runtime_ns(app, cfg)
+        out.append((app, mvl, lanes, target, kind, s / v))
+    return out
+
+
+def loss(rows):
+    total = 0.0
+    for app, mvl, lanes, target, kind, got in rows:
+        if kind == "eq":
+            total += (np.log(got) - np.log(target)) ** 2
+        elif kind == "lt" and got > target:
+            total += (np.log(got) - np.log(target)) ** 2
+    return total
+
+
+def fit():
+    mult = {a: 1.0 for a in tracegen.APPS}
+    # per-app multiplier has a closed-form optimum for "eq" anchors sharing
+    # the app: geometric mean of target/got.
+    for it in range(8):
+        rows = speedups(mult)
+        by_app = {}
+        for app, mvl, lanes, target, kind, got in rows:
+            if kind == "eq":
+                by_app.setdefault(app, []).append(target / got)
+            elif kind == "lt" and got > target:
+                by_app.setdefault(app, []).append(target / got * 0.9)
+        for app, ratios in by_app.items():
+            mult[app] *= float(np.exp(np.mean(np.log(ratios))))
+        rows = speedups(mult)
+        print(f"iter {it}: loss={loss(rows):.4f}")
+        if loss(rows) < 1e-3:
+            break
+    return mult, speedups(mult)
+
+
+if __name__ == "__main__":
+    mult, rows = fit()
+    print("\nfitted per-app scalar CPI multipliers:")
+    for app, m in sorted(mult.items()):
+        base = suite.scalar_runtime_ns(app)
+        counts = tracegen.APPS[app].counts(8)
+        cpi = base * m / counts.scalar_code_total / 0.5  # cycles @2GHz
+        print(f"  {app:16s} mult={m:6.3f}  -> effective scalar CPI {cpi:4.2f}")
+    print("\nanchor table:")
+    for app, mvl, lanes, target, kind, got in rows:
+        flag = "ok" if (kind == "eq" and abs(np.log(got / target)) < 0.2) or \
+                       (kind == "lt" and got <= target) else "MISS"
+        print(f"  {app:16s} mvl={mvl:3d} L={lanes} model={got:5.2f} paper={target:5.2f} [{kind}] {flag}")

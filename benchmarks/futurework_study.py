@@ -1,0 +1,49 @@
+"""Beyond-paper study: the knobs the paper lists but never evaluates (§7).
+
+The paper's §3 describes configurable out-of-order issue, crossbar vs ring
+interconnect, VRF read ports and memory ports, but §5 evaluates only the
+in-order/ring/1-port design.  This study sweeps those knobs over the suite —
+the experiments the paper proposes as future work, runnable here because the
+engine model is jittable and cheap.
+
+    PYTHONPATH=src python benchmarks/futurework_study.py
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import engine as eng
+from repro.core import suite, tracegen
+
+BASE = eng.VectorEngineConfig(mvl=64, lanes=4)
+
+VARIANTS = {
+    "baseline(in-order,ring,1rp,1mp)": {},
+    "ooo_issue": {"ooo_issue": True},
+    "crossbar": {"interconnect": "crossbar"},
+    "vrf_3_read_ports": {"vrf_read_ports": 3},
+    "2_mem_ports": {"mem_ports": 2},
+    "all_upgrades": {"ooo_issue": True, "interconnect": "crossbar",
+                     "vrf_read_ports": 3, "mem_ports": 2},
+}
+
+
+def main() -> None:
+    apps = list(tracegen.APPS)
+    print(f"{'variant':34s}" + "".join(f"{a[:10]:>11s}" for a in apps))
+    base_speed = {}
+    for name, kw in VARIANTS.items():
+        cfg = dataclasses.replace(BASE, **kw)
+        row = []
+        for app in apps:
+            s = suite.speedup(app, cfg)
+            if name.startswith("baseline"):
+                base_speed[app] = s
+            row.append(s / base_speed[app])
+        print(f"{name:34s}" + "".join(f"{r:11.3f}" for r in row))
+    print("\n(values are speedup relative to the paper's evaluated design; "
+          "MVL=64, 4 lanes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Render EXPERIMENTS.md tables from results/dryrun.jsonl (+ hillclimb.jsonl)."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(path):
+    rows = {}
+    if not os.path.exists(path):
+        return rows
+    for line in open(path):
+        r = json.loads(line)
+        rows[(r["arch"], r["shape"], r["mesh"], r.get("tag", ""))] = r
+    return rows
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | compile s | HBM used GiB | fits 16GB | per-dev GFLOPs | ICI GB |",
+           "|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, mesh, tag), r in sorted(rows.items()):
+        if tag:
+            continue
+        pd = r["per_device"]
+        out.append(
+            f"| {arch} | {shape} | {mesh} | {r['compile_s']:.1f} | "
+            f"{fmt_bytes(pd['hbm_used_bytes'])} | "
+            f"{'yes' if pd['fits_16GB'] else 'NO*'} | "
+            f"{pd['flops']/1e9:.1f} | {pd['ici_bytes']/1e9:.2f} |")
+    return "\n".join(out)
+
+
+def roofline_tbl(rows):
+    out = ["| arch | shape | t_compute s | t_memory s | t_collective s | bound | useful (6ND/HLO) | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, mesh, tag), r in sorted(rows.items()):
+        if mesh != "16x16" or tag:
+            continue
+        rl = r["roofline"]
+        out.append(
+            f"| {arch} | {shape} | {rl['t_compute_s']:.4g} | {rl['t_memory_s']:.4g} | "
+            f"{rl['t_collective_s']:.4g} | {rl['bound']} | {rl['useful_ratio']:.2f} | "
+            f"{rl['roofline_fraction']:.4f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    rows = load(os.path.join(RESULTS, "dryrun.jsonl"))
+    print("## Dry-run table\n")
+    print(dryrun_table(rows))
+    print("\n## Roofline (single pod 16x16)\n")
+    print(roofline_tbl(rows))

@@ -1,0 +1,141 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  For the characterization tables
+(3-9) `derived` is the max relative error vs the published cells; for the
+scalability figures (4-10) it is the modeled speedup; for kernels it is
+throughput; for the roofline it is the dominant term + roofline fraction.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _t(fn, *args, reps=3):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def table_3_to_9_characterization():
+    from repro.core import characterize as ch
+    rows = []
+    for app in ch.PAPER_TABLES:
+        t0 = time.perf_counter()
+        errs = ch.compare_to_paper(app)
+        us = (time.perf_counter() - t0) * 1e6
+        worst = max(v for r in errs for k, v in r.items() if k.startswith("err"))
+        rows.append((f"table_characterization_{app}", us, f"max_err={worst:.4f}"))
+        vao = ch.characterize(app, 8).vao_speedup
+        rows.append((f"vao_speedup_{app}", 0.0, f"{vao:.3f}"))
+    return rows
+
+
+def figures_4_to_10_scalability():
+    from repro.core import engine as eng
+    from repro.core import suite
+    rows = []
+    for app in ("blackscholes", "canneal", "jacobi-2d", "particlefilter",
+                "pathfinder", "streamcluster", "swaptions"):
+        for mvl in (8, 64, 256):
+            for lanes in (1, 8):
+                cfg = eng.VectorEngineConfig(mvl=mvl, lanes=lanes)
+                t0 = time.perf_counter()
+                s = suite.speedup(app, cfg)
+                us = (time.perf_counter() - t0) * 1e6
+                rows.append((f"fig_scalability_{app}_mvl{mvl}_l{lanes}", us,
+                             f"speedup={s:.2f}"))
+    # Fig 10: swaptions LLC study
+    for l2 in (256, 1024):
+        cfg = eng.VectorEngineConfig(mvl=256, lanes=8, l2_kb=l2)
+        s = suite.speedup("swaptions", cfg)
+        rows.append((f"fig10_swaptions_l2_{l2}kb", 0.0, f"speedup={s:.2f}"))
+    return rows
+
+
+def kernel_microbench():
+    from repro.kernels import ops
+    k = jax.random.key
+    rows = []
+    n = 16384
+    args = (jax.random.uniform(k(0), (n,), jnp.float32, 10, 100),
+            jax.random.uniform(k(1), (n,), jnp.float32, 10, 100),
+            jnp.full((n,), 0.05),
+            jax.random.uniform(k(2), (n,), jnp.float32, 0.1, 0.6),
+            jax.random.uniform(k(3), (n,), jnp.float32, 0.2, 2.0),
+            (jax.random.uniform(k(4), (n,)) > 0.5).astype(jnp.int32))
+    us = _t(lambda *a: ops.blackscholes(*a), *args)
+    rows.append(("kernel_blackscholes", us, f"{n/us:.1f}Mopt_s"))
+    a = jax.random.normal(k(5), (258, 512))
+    us = _t(lambda x: ops.jacobi2d_step(x, rows_per_block=64), a)
+    rows.append(("kernel_jacobi2d", us, f"{a.size/us:.0f}Melem_s"))
+    wall = jax.random.uniform(k(6), (64, 512))
+    us = _t(ops.pathfinder, wall)
+    rows.append(("kernel_pathfinder", us, ""))
+    p = jax.random.normal(k(7), (1024, 128))
+    c = jax.random.normal(k(8), (512, 128))
+    us = _t(ops.streamcluster_dist, p, c)
+    gf = 2 * p.shape[0] * c.shape[0] * 128 / us / 1e3
+    rows.append(("kernel_streamcluster_dist", us, f"{gf:.2f}GFLOP_s"))
+    u = jax.random.uniform(k(9), (n,), minval=1e-5, maxval=1 - 1e-5)
+    us = _t(ops.cum_normal_inv, u)
+    rows.append(("kernel_swaptions_cni", us, ""))
+    locs = jax.random.randint(k(10), (1024, 2), 0, 1000).astype(jnp.float32)
+    fan = jax.random.randint(k(11), (512, 24), -1, 1024)
+    ca = jax.random.randint(k(12), (512, 2), 0, 1000).astype(jnp.float32)
+    us = _t(lambda *a: ops.canneal_swap_cost(*a), locs, fan, ca, ca)
+    rows.append(("kernel_canneal_swapcost", us, ""))
+    cdf = jnp.sort(jax.random.uniform(k(13), (8192,)))
+    uq = jax.random.uniform(k(14), (1024,))
+    us = _t(ops.particlefilter_findindex, cdf, uq)
+    rows.append(("kernel_pf_findindex", us, ""))
+    q = jax.random.normal(k(15), (1, 512, 4, 64), jnp.float32)
+    us = _t(lambda q: ops.flash_attention(q, q, q, bq=128, bk=128), q)
+    rows.append(("kernel_flash_attention", us, ""))
+    x = jax.random.normal(k(16), (1, 512, 4, 16))
+    dt = jax.nn.softplus(jax.random.normal(k(17), (1, 512, 4)))
+    A = -jnp.exp(jax.random.normal(k(18), (4,)) * 0.3)
+    Bm = jax.random.normal(k(19), (1, 512, 32))
+    us = _t(lambda *a: ops.ssd_scan(*a, chunk=128), x, dt, A, Bm, Bm)
+    rows.append(("kernel_ssd_scan", us, ""))
+    return rows
+
+
+def roofline_table():
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "dryrun.jsonl")
+    if not os.path.exists(path):
+        return [("roofline", 0.0, "results/dryrun.jsonl missing")]
+    rows = {}
+    for line in open(path):
+        r = json.loads(line)
+        rows[(r["arch"], r["shape"], r["mesh"])] = r
+    out = []
+    for (arch, shape, mesh), r in sorted(rows.items()):
+        if mesh != "16x16":
+            continue
+        rl = r["roofline"]
+        tmax = max(rl["t_compute_s"], rl["t_memory_s"], rl["t_collective_s"])
+        out.append((f"roofline_{arch}_{shape}", 0.0,
+                    f"bound={rl['bound']}|t={tmax:.3f}s|frac={rl['roofline_fraction']:.3f}"))
+    return out
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for fn in (table_3_to_9_characterization, figures_4_to_10_scalability,
+               kernel_microbench, roofline_table):
+        for name, us, derived in fn():
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

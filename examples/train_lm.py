@@ -1,0 +1,63 @@
+"""End-to-end LM training driver.
+
+Default: a ~10M-parameter llama-style model for 60 steps on CPU (finishes in
+minutes and demonstrably learns the synthetic distribution).  ``--full`` runs
+the ~100M-parameter configuration for 300 steps — the deliverable-scale run
+(hours on this CPU container; the natural target is one TPU host).  Both paths
+exercise the real trainer: sharded step builder, checkpoint/restart, seekable
+data, straggler/retry logic.
+
+    PYTHONPATH=src python examples/train_lm.py [--full] [--steps N]
+"""
+import argparse
+
+from repro.configs.base import InputShape, ModelConfig, register
+from repro.models import build
+from repro.train.loop import LoopConfig, train
+
+
+def small_cfg():
+    # ~10M params
+    return ModelConfig(
+        name="lm-10m", family="dense", num_layers=4, d_model=256, num_heads=8,
+        num_kv_heads=4, head_dim=32, d_ff=1024, vocab_size=8192,
+        dtype="float32", remat=False)
+
+
+def full_cfg():
+    # ~100M params (GPT-2-medium-ish)
+    return ModelConfig(
+        name="lm-100m", family="dense", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=12, head_dim=64, d_ff=3072,
+        vocab_size=32768, dtype="float32", remat=False)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt", default="/tmp/train_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = full_cfg() if args.full else small_cfg()
+    steps = args.steps or (300 if args.full else 60)
+    model = build(cfg)
+    n_params = sum(
+        int(__import__("numpy").prod(s.shape))
+        for s in __import__("jax").tree.leaves(model.param_structs()))
+    print(f"== {cfg.name}: {n_params/1e6:.1f}M params, {steps} steps ==")
+
+    shape = InputShape("train", seq_len=256 if args.full else 128,
+                       global_batch=8, kind="train")
+    state = train(model, shape, mesh=None,
+                  loop_cfg=LoopConfig(total_steps=steps, ckpt_every=max(steps // 3, 1),
+                                      ckpt_dir=args.ckpt, log_every=10))
+    print(f"final loss {state.losses[-1]:.4f} "
+          f"(start {state.losses[0]:.4f}); "
+          f"median step {sorted(state.step_times)[len(state.step_times)//2]*1e3:.0f} ms; "
+          f"restarts={state.restarts} stragglers={state.straggler_events}")
+    assert state.losses[-1] < state.losses[0], "did not learn"
+
+
+if __name__ == "__main__":
+    main()

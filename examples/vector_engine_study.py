@@ -1,0 +1,49 @@
+"""The paper's §5 study: the RiVec suite on 24 vector-engine configurations.
+
+Reproduces the shape of Figures 4-10 (speedup vs MVL x lanes per app) and the
+Fig-10 LLC comparison, printed as tables.
+
+    PYTHONPATH=src python examples/vector_engine_study.py [--app blackscholes]
+"""
+import argparse
+
+from repro.core import engine as eng
+from repro.core import suite, tracegen
+from repro.core.characterize import characterize
+
+
+def study(app: str):
+    print(f"\n=== {app} ({tracegen.APPS[app].notes}) ===")
+    c = characterize(app, 8)
+    print(f"VAO speedup {c.vao_speedup:.2f}; "
+          f"%vectorization {c.pct_vectorization:.0%} @MVL=8")
+    mvls = (8, 16, 32, 64, 128, 256)
+    lanes = (1, 2, 4, 8)
+    print("speedup over scalar     " + "".join(f"  L={l}  " for l in lanes))
+    for m in mvls:
+        row = [suite.speedup(app, eng.VectorEngineConfig(mvl=m, lanes=l))
+               for l in lanes]
+        print(f"  MVL={m:4d}            " + "".join(f"{s:6.2f}" for s in row))
+
+
+def llc_study():
+    print("\n=== swaptions LLC study (paper Fig 10) ===")
+    for l2 in (256, 1024):
+        row = [suite.speedup("swaptions",
+                             eng.VectorEngineConfig(mvl=m, lanes=8, l2_kb=l2))
+               for m in (8, 64, 128, 256)]
+        print(f"  L2={l2:5d}KB  " + "".join(f"{s:6.2f}" for s in row))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--app", default=None)
+    args = ap.parse_args()
+    apps = [args.app] if args.app else list(tracegen.APPS)
+    for app in apps:
+        study(app)
+    llc_study()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.configs.base import (ARCH_IDS, SHAPES, InputShape, ModelConfig,
+                                get_config, iter_cells, list_configs, register,
+                                shape_applicable)

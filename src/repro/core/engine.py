@@ -1,0 +1,250 @@
+"""Cycle-level decoupled vector-engine timing model (paper §3) as a lax.scan.
+
+The gem5 event-driven model is reformulated as a *list-scheduler recurrence*:
+every instruction's issue time is the max over its structural and data
+constraints (scalar-core frontier, rename/ROB/queue slot availability, operand
+readiness, FU availability, in-order gate), and its completion feeds those
+same resources forward.  Ring buffers in the scan carry give ROB / physical-
+register / issue-queue occupancy exactly, so the model reproduces the paper's
+first-order effects:
+
+  * start-up time = FU pipe depth + ceil(n_src / VRF read ports)  (§3.2.4)
+  * one arithmetic instruction in flight across all lanes         (§3.2.3)
+  * VMU serialization: one memory instruction at a time           (§3.2.5)
+  * ring vs crossbar interconnect cost for slides/reductions      (§3.2.6)
+  * decoupling: scalar core runs ahead, queues absorb slack       (§3.1)
+  * vfirst/vpopc results stall the scalar core                    (§4.1.4)
+
+Times are in vector-engine cycles (1 GHz -> 1 cycle = 1 ns); the scalar core
+runs at 2 GHz dual-issue with latency-class costs.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import isa
+
+MAX_RING = 64  # static ring-buffer capacity (>= max rob/queue/phys-in-flight)
+
+
+@dataclass(frozen=True)
+class VectorEngineConfig:
+    """Every knob of Table 10 (and §3.2) is a field here."""
+    mvl: int = 256                 # max vector length, 64-bit elements
+    lanes: int = 8
+    phys_regs: int = 40            # >= 32 architectural
+    rob_entries: int = 64
+    queue_entries: int = 16        # per queue (arith / memory)
+    ooo_issue: bool = False
+    vrf_read_ports: int = 1
+    vrf_line_bits: int = 512
+    interconnect: str = "ring"     # "ring" | "crossbar"
+    mem_ports: int = 1
+    cache_line_bits: int = 512
+    lat_l1: float = 4.0
+    lat_l2: float = 12.0
+    lat_dram: float = 100.0
+    mshrs: int = 16
+    l2_kb: int = 256
+    scalar_freq_ghz: float = 2.0
+    vector_freq_ghz: float = 1.0
+    scalar_ipc: float = 2.0
+    dispatch_latency: float = 5.0  # scalar commit -> vector engine dispatch
+
+    def label(self) -> str:
+        return f"mvl{self.mvl}_l{self.lanes}"
+
+
+# Calibrated latency classes (fit against the paper's §5 speedup anchors; see
+# benchmarks/calibrate.py provenance).  Scalar: effective dependent-chain
+# cycles per instruction at 2 GHz.  Vector: FU pipe depth (start-up) and
+# per-element throughput cost in cycles/element/lane.
+SCALAR_CYCLES = np.array([1.1, 3.0, 20.0, 24.0], np.float32)   # per FU class
+VEC_PIPE_DEPTH = np.array([2.0, 4.0, 8.0, 8.0], np.float32)
+VEC_ELEM_CYCLES = np.array([1.0, 1.0, 2.0, 2.0], np.float32)
+
+
+def _ring_read(ring, count, capacity):
+    """Time at which the slot for the `count`-th allocation frees (0 if never
+    yet full): value written `capacity` allocations ago."""
+    idx = jnp.mod(count - capacity, MAX_RING)
+    return jnp.where(count >= capacity, ring[idx], 0.0)
+
+
+def _ring_write(ring, count, value):
+    return ring.at[jnp.mod(count, MAX_RING)].set(value)
+
+
+@functools.partial(jax.jit, static_argnames=("ooo", "ring_ic"))
+def _simulate(xs, params, ooo: bool, ring_ic: bool):
+    (lanes, phys_extra, rob_entries, q_entries, read_ports, line_elems,
+     mem_ports, lat_l1, lat_l2, lat_dram, scalar_scale, dispatch_lat,
+     sc_cost, pipe_depth, elem_cost) = params
+
+    def step(carry, x):
+        (reg_ready, rob_ring, n_rob, phys_ring, n_phys, aq_ring, n_aq,
+         mq_ring, n_mq, t_scalar, lane_free, vmu_free, last_aq, last_mq,
+         last_commit, scalar_res, busy_lane, busy_vmu) = carry
+        kind, vl, fu, n_src, src1, src2, dst, mpat, m1, m2, s_count, dep = x
+
+        vlf = vl.astype(jnp.float32)
+        is_scalar = kind == isa.SCALAR_BLOCK
+
+        # ---- scalar block ---------------------------------------------------
+        t_wait = jnp.where(dep, jnp.maximum(t_scalar, scalar_res), t_scalar)
+        sc_time = s_count.astype(jnp.float32) * sc_cost[fu] * scalar_scale
+        t_scalar_s = t_wait + sc_time
+
+        # ---- vector instruction --------------------------------------------
+        # scalar pipe cost of carrying the vector instruction to commit
+        t_scalar_v = t_scalar + sc_cost[0] * scalar_scale
+        rob_slot = _ring_read(rob_ring, n_rob, rob_entries)
+        phys_slot = _ring_read(phys_ring, n_phys, phys_extra)
+        is_mem = (kind == isa.VLOAD) | (kind == isa.VSTORE)
+        q_slot = jnp.where(is_mem,
+                           _ring_read(mq_ring, n_mq, q_entries),
+                           _ring_read(aq_ring, n_aq, q_entries))
+        dispatch = jnp.maximum(jnp.maximum(t_scalar_v + dispatch_lat, rob_slot),
+                               jnp.maximum(phys_slot, q_slot))
+
+        r1 = jnp.where(src1 >= 0, reg_ready[jnp.maximum(src1, 0)], 0.0)
+        r2 = jnp.where(src2 >= 0, reg_ready[jnp.maximum(src2, 0)], 0.0)
+        ops_ready = jnp.maximum(r1, r2)
+
+        fu_free = jnp.where(is_mem, vmu_free, lane_free)
+        inorder = jnp.where(is_mem, last_mq, last_aq)
+        issue = jnp.maximum(jnp.maximum(dispatch, ops_ready), fu_free)
+        if not ooo:
+            issue = jnp.maximum(issue, inorder)
+
+        # start-up: pipe depth + VRF read-port serialization (§3.2.4)
+        startup = pipe_depth[fu] + jnp.ceil(
+            n_src.astype(jnp.float32) / read_ports)
+
+        per_lane = jnp.ceil(vlf / lanes)
+        exec_arith = per_lane * elem_cost[fu]
+        # slides move each element one lane over: one extra hop either topology
+        exec_slide = per_lane + 1.0
+        hops = (lanes - 1.0) if ring_ic else jnp.ceil(jnp.log2(jnp.maximum(lanes, 2.0)))
+        exec_reduce = per_lane + hops + pipe_depth[fu]
+        exec_move = per_lane
+        exec_mask = per_lane + hops  # vfirst/vpopc reduce a mask to a scalar
+
+        exp_lat = lat_l1 + m1 * (lat_l2 + m2 * lat_dram)
+        lines = jnp.ceil(vlf / line_elems)
+        # DRAM-missing lines pay a bandwidth term (~8 cycles/line at DDR3
+        # rates), not just latency: this is what makes the paper's Fig-10
+        # LLC-size study visible (hit-under-miss hides latency, not BW)
+        line_cost = 1.0 + m1 * m2 * 8.0
+        exec_unit = exp_lat + lines * line_cost / mem_ports
+        exec_gather = exp_lat + vlf * (1.0 + m1 * m2 * 2.0) / mem_ports
+        exec_mem = jnp.where(mpat == isa.MEM_UNIT, exec_unit, exec_gather)
+
+        exec_c = jnp.select(
+            [kind == isa.VARITH, kind == isa.VLOAD, kind == isa.VSTORE,
+             kind == isa.VSLIDE, kind == isa.VREDUCE, kind == isa.VMASK_SCALAR,
+             kind == isa.VMOVE],
+            [exec_arith, exec_mem, exec_mem, exec_slide, exec_reduce,
+             exec_mask, exec_move], 0.0)
+
+        complete = issue + startup + exec_c
+        commit = jnp.maximum(complete, last_commit)
+
+        # ---- merge scalar/vector outcomes -----------------------------------
+        t_scalar_n = jnp.where(is_scalar, t_scalar_s, t_scalar_v)
+        upd = lambda old, new: jnp.where(is_scalar, old, new)
+
+        reg_ready_n = jnp.where(
+            is_scalar | (dst < 0), reg_ready,
+            reg_ready.at[jnp.maximum(dst, 0)].set(complete))
+        rob_ring_n = jnp.where(is_scalar, rob_ring,
+                               _ring_write(rob_ring, n_rob, commit))
+        phys_ring_n = jnp.where(is_scalar, phys_ring,
+                                _ring_write(phys_ring, n_phys, commit))
+        aq_ring_n = jnp.where(is_scalar | is_mem, aq_ring,
+                              _ring_write(aq_ring, n_aq, issue))
+        mq_ring_n = jnp.where(is_scalar | ~is_mem, mq_ring,
+                              _ring_write(mq_ring, n_mq, issue))
+        one = jnp.int32(1)
+        carry_n = (
+            reg_ready_n, rob_ring_n, upd(n_rob, n_rob + one),
+            phys_ring_n, upd(n_phys, n_phys + one),
+            aq_ring_n, upd(n_aq, jnp.where(is_mem, n_aq, n_aq + one)),
+            mq_ring_n, upd(n_mq, jnp.where(is_mem, n_mq + one, n_mq)),
+            t_scalar_n,
+            upd(lane_free, jnp.where(is_mem, lane_free, complete)),
+            upd(vmu_free, jnp.where(is_mem, complete, vmu_free)),
+            upd(last_aq, jnp.where(is_mem, last_aq, issue)),
+            upd(last_mq, jnp.where(is_mem, issue, last_mq)),
+            upd(last_commit, commit),
+            upd(scalar_res,
+                jnp.where(kind == isa.VMASK_SCALAR, complete, scalar_res)),
+            busy_lane + jnp.where(is_scalar | is_mem, 0.0, startup + exec_c),
+            busy_vmu + jnp.where(is_mem, startup + exec_c, 0.0),
+        )
+        return carry_n, commit
+
+    zero = jnp.float32(0.0)
+    izero = jnp.int32(0)
+    carry0 = (jnp.zeros(32, jnp.float32), jnp.zeros(MAX_RING, jnp.float32), izero,
+              jnp.zeros(MAX_RING, jnp.float32), izero,
+              jnp.zeros(MAX_RING, jnp.float32), izero,
+              jnp.zeros(MAX_RING, jnp.float32), izero,
+              zero, zero, zero, zero, zero, zero, zero, zero, zero)
+    carry, commits = jax.lax.scan(step, carry0, xs)
+    t_scalar, last_commit = carry[9], carry[14]
+    return {
+        "time": jnp.maximum(t_scalar, last_commit),
+        "t_scalar": t_scalar,
+        "t_last_commit": last_commit,
+        "lane_busy": carry[16],
+        "vmu_busy": carry[17],
+    }
+
+
+def simulate(trace: isa.Trace, cfg: VectorEngineConfig) -> dict:
+    """Run the timing model; returns times in vector-engine cycles (=ns)."""
+    xs = (
+        jnp.asarray(trace.kind), jnp.asarray(trace.vl), jnp.asarray(trace.fu),
+        jnp.asarray(trace.n_src), jnp.asarray(trace.src1),
+        jnp.asarray(trace.src2), jnp.asarray(trace.dst),
+        jnp.asarray(trace.mem_pattern), jnp.asarray(trace.miss_l1),
+        jnp.asarray(trace.miss_l2), jnp.asarray(trace.scalar_count),
+        jnp.asarray(trace.dep_scalar),
+    )
+    freq_ratio = cfg.vector_freq_ghz / cfg.scalar_freq_ghz
+    scalar_scale = freq_ratio / cfg.scalar_ipc
+    params = (
+        jnp.float32(cfg.lanes), jnp.int32(cfg.phys_regs - 32),
+        jnp.int32(cfg.rob_entries), jnp.int32(cfg.queue_entries),
+        jnp.float32(cfg.vrf_read_ports), jnp.float32(cfg.cache_line_bits / 64),
+        jnp.float32(cfg.mem_ports), jnp.float32(cfg.lat_l1),
+        jnp.float32(cfg.lat_l2), jnp.float32(cfg.lat_dram),
+        jnp.float32(scalar_scale), jnp.float32(cfg.dispatch_latency),
+        jnp.asarray(SCALAR_CYCLES), jnp.asarray(VEC_PIPE_DEPTH),
+        jnp.asarray(VEC_ELEM_CYCLES),
+    )
+    out = _simulate(xs, params, bool(cfg.ooo_issue), cfg.interconnect == "ring")
+    return {k: float(v) for k, v in out.items()}
+
+
+def steady_state_time(body: isa.Trace, cfg: VectorEngineConfig,
+                      warmup: int = 8, measure: int = 24) -> float:
+    """Marginal steady-state time of one loop body (warmup removed)."""
+    t1 = simulate(body.tile(warmup), cfg)["time"]
+    t2 = simulate(body.tile(warmup + measure), cfg)["time"]
+    return (t2 - t1) / measure
+
+
+def scalar_time(trace: isa.Trace, cfg: VectorEngineConfig) -> float:
+    """Latency-weighted scalar-core time for a pure-scalar trace (ns)."""
+    freq_ratio = cfg.vector_freq_ghz / cfg.scalar_freq_ghz
+    scale = freq_ratio / cfg.scalar_ipc
+    mask = trace.kind == isa.SCALAR_BLOCK
+    return float(np.sum(
+        trace.scalar_count[mask] * SCALAR_CYCLES[trace.fu[mask]] * scale))

@@ -1,0 +1,124 @@
+"""Vector IR: the trace format consumed by the engine timing model.
+
+A trace is a struct-of-arrays (one entry per instruction, program order).
+Scalar instructions are run-length compressed into ``SCALAR_BLOCK`` entries
+(the paper's tables count them individually; the timing model only needs the
+latency-weighted block cost).  This mirrors the paper's gem5 model boundary:
+vector instructions are handed to the decoupled engine at scalar commit
+(§3.1), so wrong-path effects never reach the vector engine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+# instruction kinds
+SCALAR_BLOCK = 0   # `scalar_count` scalar instructions of class `fu_class`
+VARITH = 1
+VLOAD = 2
+VSTORE = 3
+VSLIDE = 4         # slide1up/slide1down: lane interconnect, distance 1
+VREDUCE = 5        # reduction via binary operator tree across lanes
+VMASK_SCALAR = 6   # vfirst.m / vpopc.m: writes a scalar register
+VMOVE = 7          # whole-register moves / spill code (VL = MVL)
+
+KIND_NAMES = {
+    SCALAR_BLOCK: "scalar", VARITH: "arith", VLOAD: "load", VSTORE: "store",
+    VSLIDE: "slide", VREDUCE: "reduce", VMASK_SCALAR: "mask2s", VMOVE: "move",
+}
+
+# functional-unit classes (latency class of the operation)
+FU_SIMPLE = 0      # add/sub/logic/compare/min/max
+FU_MUL = 1         # mul / fused multiply-add
+FU_DIV = 2         # div / sqrt
+FU_TRANS = 3       # log / exp / cos (transcendental)
+N_FU_CLASSES = 4
+
+# memory access patterns
+MEM_UNIT = 0
+MEM_STRIDED = 1
+MEM_INDEXED = 2
+
+
+@dataclass
+class Trace:
+    """Struct-of-arrays instruction trace (np arrays, jnp-convertible)."""
+    kind: np.ndarray           # int32 [N]
+    vl: np.ndarray             # int32 [N] vector length (elements)
+    fu: np.ndarray             # int32 [N] FU class
+    n_src: np.ndarray          # int32 [N] vector source operands (VRF reads)
+    src1: np.ndarray           # int32 [N] logical reg or -1
+    src2: np.ndarray
+    dst: np.ndarray            # int32 [N] logical dest reg or -1
+    mem_pattern: np.ndarray    # int32 [N] MEM_* for loads/stores
+    miss_l1: np.ndarray        # f32 [N] P(L1 miss) per access
+    miss_l2: np.ndarray        # f32 [N] P(L2 miss | L1 miss)
+    scalar_count: np.ndarray   # int32 [N] for SCALAR_BLOCK
+    dep_scalar: np.ndarray     # bool [N] consumes the engine's scalar result
+
+    def __len__(self):
+        return len(self.kind)
+
+    @staticmethod
+    def from_records(recs: list[dict]) -> "Trace":
+        n = len(recs)
+        get = lambda k, d=0: np.asarray([r.get(k, d) for r in recs])
+        return Trace(
+            kind=get("kind").astype(np.int32),
+            vl=get("vl", 0).astype(np.int32),
+            fu=get("fu", FU_SIMPLE).astype(np.int32),
+            n_src=get("n_src", 2).astype(np.int32),
+            src1=get("src1", -1).astype(np.int32),
+            src2=get("src2", -1).astype(np.int32),
+            dst=get("dst", -1).astype(np.int32),
+            mem_pattern=get("mem_pattern", MEM_UNIT).astype(np.int32),
+            miss_l1=get("miss_l1", 0.0).astype(np.float32),
+            miss_l2=get("miss_l2", 0.0).astype(np.float32),
+            scalar_count=get("scalar_count", 0).astype(np.int32),
+            dep_scalar=get("dep_scalar", False).astype(bool),
+        )
+
+    def tile(self, n: int) -> "Trace":
+        """Repeat the trace n times (steady-state loop bodies)."""
+        return Trace(**{k: np.tile(getattr(self, k), n)
+                        for k in self.__dataclass_fields__})
+
+    def concat(self, other: "Trace") -> "Trace":
+        return Trace(**{k: np.concatenate([getattr(self, k), getattr(other, k)])
+                        for k in self.__dataclass_fields__})
+
+
+def scalar_block(count: int, fu: int = FU_SIMPLE, dep_scalar: bool = False) -> dict:
+    return dict(kind=SCALAR_BLOCK, scalar_count=int(round(count)), fu=fu,
+                dep_scalar=dep_scalar)
+
+
+def varith(vl, fu=FU_SIMPLE, n_src=2, src1=0, src2=1, dst=2) -> dict:
+    return dict(kind=VARITH, vl=vl, fu=fu, n_src=n_src, src1=src1, src2=src2, dst=dst)
+
+
+def vload(vl, dst=0, pattern=MEM_UNIT, miss_l1=0.1, miss_l2=0.05) -> dict:
+    return dict(kind=VLOAD, vl=vl, dst=dst, mem_pattern=pattern, n_src=0,
+                miss_l1=miss_l1, miss_l2=miss_l2)
+
+
+def vstore(vl, src1=0, pattern=MEM_UNIT, miss_l1=0.1, miss_l2=0.05) -> dict:
+    return dict(kind=VSTORE, vl=vl, src1=src1, dst=-1, mem_pattern=pattern,
+                n_src=1, miss_l1=miss_l1, miss_l2=miss_l2)
+
+
+def vslide(vl, src1=0, dst=1) -> dict:
+    return dict(kind=VSLIDE, vl=vl, src1=src1, dst=dst, n_src=1)
+
+
+def vreduce(vl, src1=0, dst=1, fu=FU_SIMPLE) -> dict:
+    return dict(kind=VREDUCE, vl=vl, src1=src1, dst=dst, n_src=1, fu=fu)
+
+
+def vmask_scalar(vl, src1=0) -> dict:
+    return dict(kind=VMASK_SCALAR, vl=vl, src1=src1, dst=-1, n_src=1)
+
+
+def vmove(vl, src1=0, dst=1) -> dict:
+    return dict(kind=VMOVE, vl=vl, src1=src1, dst=dst, n_src=1)

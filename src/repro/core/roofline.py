@@ -1,0 +1,150 @@
+"""TPU three-term roofline model (the paper's VAO analysis, generalized).
+
+The paper predicts vector-engine speedups from instruction counts alone (VAO
+speedup, §4.1); on TPU the equivalent first-order model is the three-term
+roofline computed from the compiled dry-run artifact:
+
+    compute    = HLO_FLOPs / peak_FLOPs            (per device)
+    memory     = HLO_bytes / HBM_bandwidth          (per device)
+    collective = ICI_bytes / ICI_bandwidth          (per device)
+
+The dominant term is the bottleneck; step time >= max(terms); the "roofline
+fraction" we hillclimb is useful_model_flops_time / max(terms).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Chip:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12      # bf16 FLOP/s
+    hbm_bw: float = 819e9           # bytes/s
+    ici_bw: float = 50e9            # bytes/s per link (1 link assumed in use)
+    hbm_bytes: float = 16e9         # capacity
+
+
+V5E = Chip()
+
+
+@dataclass
+class Roofline:
+    flops: float                # per-device HLO flops
+    hbm_bytes: float            # per-device HLO bytes accessed
+    ici_bytes: float            # per-device collective bytes
+    model_flops: float          # useful (6ND-style) flops, GLOBAL
+    chips: int
+    chip: Chip = V5E
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / self.chip.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / self.chip.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.ici_bytes / self.chip.ici_bw
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (global HLO flops): how much compiled compute is useful."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Roofline fraction: useful-flops time / bound time (per device)."""
+        t_useful = self.model_flops / self.chips / self.chip.peak_flops
+        return t_useful / self.t_bound if self.t_bound else 0.0
+
+    def row(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bound": self.bound,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.mfu_bound,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful FLOPs: 6·N·D train, 2·N·D inference (N = active params)."""
+    n = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def _attn_params(cfg) -> float:
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return d * H * hd * 2 + d * KV * hd * 2
+
+
+def _ssd_params(cfg) -> float:
+    D, DI, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    return D * DI * 2 + 2 * D * N + D * H + DI * D + (DI + 2 * N) * 4
+
+
+def active_params(cfg) -> float:
+    """Parameters touched per token (MoE counts top-k experts only)."""
+    d = cfg.d_model
+    emb = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.family == "dense" or cfg.family == "vlm":
+        per = _attn_params(cfg) + 3 * d * cfg.d_ff
+        return emb + cfg.num_layers * per
+    if cfg.family == "moe":
+        per = _attn_params(cfg) + 3 * d * cfg.d_ff * cfg.experts_per_token
+        return emb + cfg.num_layers * per
+    if cfg.family == "ssm":
+        return emb + cfg.num_layers * _ssd_params(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import layout
+        total = 0.0
+        for mixer, ffn in layout(cfg):
+            total += _attn_params(cfg) if mixer == "attn" else _ssd_params(cfg)
+            total += 3 * d * cfg.d_ff * (cfg.experts_per_token if ffn == "moe" else 1)
+        return emb + (cfg.num_layers // cfg.attn_period) * total
+    if cfg.family == "encdec":
+        enc = cfg.encoder_layers * (_attn_params(cfg) + 3 * d * cfg.d_ff)
+        dec = cfg.num_layers * (2 * _attn_params(cfg) + 3 * d * cfg.d_ff)
+        return emb + enc + dec
+    raise ValueError(cfg.family)
+
+
+def total_params(cfg) -> float:
+    """All parameters (MoE counts every expert)."""
+    if cfg.family == "moe":
+        d = cfg.d_model
+        per = _attn_params(cfg) + 3 * d * cfg.d_ff * cfg.num_experts
+        emb = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+        return emb + cfg.num_layers * per
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import layout
+        d = cfg.d_model
+        emb = cfg.vocab_size * d
+        total = 0.0
+        for mixer, ffn in layout(cfg):
+            total += _attn_params(cfg) if mixer == "attn" else _ssd_params(cfg)
+            total += 3 * d * cfg.d_ff * (cfg.num_experts if ffn == "moe" else 1)
+        return emb + (cfg.num_layers // cfg.attn_period) * total
+    return active_params(cfg)

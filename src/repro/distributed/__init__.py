@@ -1,0 +1,2 @@
+from repro.distributed.sharding import (constraint, logical_to_spec,
+                                        named_sharding, tree_shardings, use_mesh)

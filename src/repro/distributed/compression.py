@@ -1,0 +1,49 @@
+"""int8 error-feedback gradient compression.
+
+At 1000-node scale the gradient reduce-scatter competes with the FSDP
+all-gathers for ICI; 4x-compressing gradients (bf16/f32 -> int8 with a per-
+tensor scale) cuts that term.  Error feedback (residual carried to the next
+step) keeps SGD convergence (1-bit Adam lineage).  ``compress_decompress`` is
+the in-graph quantize/dequantize used by the train step when
+``compress_grads=True``; with shard_map the quantized payload is what crosses
+the ICI (XLA reduces the int8-scaled values).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x):
+    """x -> (int8 q, f32 scale); per-tensor symmetric."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_decompress(grads, residuals=None):
+    """Quantize/dequantize every leaf (optionally with error feedback).
+
+    Returns grads' (and residuals' when residuals are provided).
+    """
+    if residuals is None:
+        def f(g):
+            q, s = quantize(g)
+            return dequantize(q, s, g.dtype)
+        return jax.tree.map(f, grads)
+
+    def f(g, r):
+        gc = g.astype(jnp.float32) + r
+        q, s = quantize(gc)
+        deq = dequantize(q, s)
+        return deq.astype(g.dtype), gc - deq
+
+    out = jax.tree.map(f, grads, residuals)
+    new_g = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_r = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, new_r

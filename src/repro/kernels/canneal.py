@@ -1,0 +1,53 @@
+"""Canneal swap_cost Pallas kernel: VMEM-resident location table + gather.
+
+The paper's indexed loads (the app's bottleneck on a vector machine) become a
+gather from a VMEM-resident coordinate table: the table block stays pinned
+while fan-index blocks stream through — the TPU analogue of keeping the hot
+data behind the VMU.  Padding entries (fan_idx < 0) are masked, reproducing
+the paper's short-and-variable VL behavior.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(locs_ref, idx_ref, ca_ref, cb_ref, oa_ref, ob_ref):
+    locs = locs_ref[...].astype(jnp.float32)       # [N, 2] (VMEM resident)
+    idx = idx_ref[...]                             # [B, F]
+    valid = idx >= 0
+    safe = jnp.maximum(idx, 0)
+    fx = locs[:, 0][safe]                          # gather (indexed load)
+    fy = locs[:, 1][safe]
+    ca = ca_ref[...].astype(jnp.float32)           # [B, 2]
+    cb = cb_ref[...].astype(jnp.float32)
+    da = jnp.abs(fx - ca[:, 0:1]) + jnp.abs(fy - ca[:, 1:2])
+    db = jnp.abs(fx - cb[:, 0:1]) + jnp.abs(fy - cb[:, 1:2])
+    oa_ref[...] = jnp.where(valid, da, 0.0).sum(-1)   # the vredsum
+    ob_ref[...] = jnp.where(valid, db, 0.0).sum(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def swap_cost(locs, fan_idx, cand_a, cand_b, *, block: int = 256,
+              interpret: bool = False):
+    """locs [N,2]; fan_idx [B,F] (-1 padded); cand_a/b [B,2] -> ([B],[B])."""
+    N = locs.shape[0]
+    B, F = fan_idx.shape
+    assert B % block == 0, (B, block)
+    grid = (B // block,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((N, 2), lambda i: (0, 0)),
+                  pl.BlockSpec((block, F), lambda i: (i, 0)),
+                  pl.BlockSpec((block, 2), lambda i: (i, 0)),
+                  pl.BlockSpec((block, 2), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                   pl.BlockSpec((block,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((B,), jnp.float32),
+                   jax.ShapeDtypeStruct((B,), jnp.float32)],
+        interpret=interpret,
+    )(locs, fan_idx, cand_a, cand_b)

@@ -1,0 +1,45 @@
+"""Particle-filter find-index Pallas kernel: the vfirst.m / vpopc.m pattern.
+
+For each query u_j over a monotone CDF, the first index with cdf[i] >= u_j
+equals popcount(cdf < u_j) — the paper's mask-to-scalar instructions become a
+compare + intra-block reduction, accumulated across CDF blocks in the
+sequential grid dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(cdf_ref, u_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    cdf = cdf_ref[...]                      # [BC]
+    u = u_ref[...]                          # [BU]
+    counts = jnp.sum((cdf[None, :] < u[:, None]).astype(jnp.int32), axis=1)
+    o_ref[...] += counts                    # vpopc.m accumulation
+
+
+@functools.partial(jax.jit, static_argnames=("bu", "bc", "interpret"))
+def find_index(cdf, u, *, bu: int = 256, bc: int = 2048, interpret: bool = False):
+    """cdf [N] monotone; u [M] queries -> first index [M] with cdf >= u."""
+    N, M = cdf.shape[0], u.shape[0]
+    bu, bc = min(bu, M), min(bc, N)
+    assert M % bu == 0 and N % bc == 0, (M, N, bu, bc)
+    counts = pl.pallas_call(
+        _kernel,
+        grid=(M // bu, N // bc),
+        in_specs=[pl.BlockSpec((bc,), lambda i, j: (j,)),
+                  pl.BlockSpec((bu,), lambda i, j: (i,))],
+        out_specs=pl.BlockSpec((bu,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((M,), jnp.int32),
+        interpret=interpret,
+    )(cdf, u)
+    return jnp.minimum(counts, N - 1)

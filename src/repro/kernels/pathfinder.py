@@ -1,0 +1,55 @@
+"""Pathfinder Pallas kernel: dynamic-programming row sweep with VMEM scratch.
+
+The running min-cost row lives in VMEM scratch and persists across the
+sequential TPU grid (one grid step per wall row) — the decoupled-engine
+analogue of keeping the working vector register resident.  slide1up/slide1down
+become +-1 column shifts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_INF = 3.0e38  # python scalar: jnp constants would be captured consts in the kernel
+
+
+def _kernel(wall_ref, o_ref, cost_ref):
+    i = pl.program_id(0)
+    nrows = pl.num_programs(0)
+    w = wall_ref[0].astype(jnp.float32)      # [C]
+
+    @pl.when(i == 0)
+    def _init():
+        cost_ref[...] = w
+
+    @pl.when(i > 0)
+    def _step():
+        cost = cost_ref[...]
+        c = cost.reshape(1, -1)
+        left = jnp.roll(c, 1, axis=1).at[:, 0].set(_INF)[0]    # slide1up
+        right = jnp.roll(c, -1, axis=1).at[:, -1].set(_INF)[0]  # slide1down
+        cost_ref[...] = w + jnp.minimum(cost, jnp.minimum(left, right))
+
+    @pl.when(i == nrows - 1)
+    def _emit():
+        o_ref[0] = cost_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pathfinder(wall, *, interpret: bool = False):
+    """wall [R, C] -> final min-cost row [C] (fp32)."""
+    R, C = wall.shape
+    out = pl.pallas_call(
+        _kernel,
+        grid=(R,),
+        in_specs=[pl.BlockSpec((1, C), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, C), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, C), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((C,), jnp.float32)],
+        interpret=interpret,
+    )(wall)
+    return out[0]

@@ -1,0 +1,44 @@
+"""Streamcluster dist Pallas kernel: pairwise squared distances on the MXU.
+
+Hardware adaptation (DESIGN.md §2): the paper's dist() is a dot-product-shaped
+loop (1 load + 1 multiply-sub per chunk, then a reduction), i.e. bandwidth
+bound on a vector machine.  On TPU we rewrite ||p-c||^2 = ||p||^2 + ||c||^2
+- 2 p.c so the O(M*N*D) term runs on the MXU systolic array instead of the
+VPU — the single biggest structural win available to this app.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(p_ref, c_ref, o_ref):
+    p = p_ref[...].astype(jnp.float32)       # [BM, D]
+    c = c_ref[...].astype(jnp.float32)       # [BN, D]
+    p2 = jnp.sum(p * p, axis=-1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=-1)
+    pc = jax.lax.dot_general(p, c, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.maximum(p2 + c2[None, :] - 2.0 * pc, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def streamcluster_dist(points, centers, *, bm: int = 256, bn: int = 256,
+                       interpret: bool = False):
+    """points [M,D], centers [N,D] -> squared distances [M,N] (fp32)."""
+    M, D = points.shape
+    N, _ = centers.shape
+    bm, bn = min(bm, M), min(bn, N)
+    assert M % bm == 0 and N % bn == 0, (M, N, bm, bn)
+    return pl.pallas_call(
+        _kernel,
+        grid=(M // bm, N // bn),
+        in_specs=[pl.BlockSpec((bm, D), lambda i, j: (i, 0)),
+                  pl.BlockSpec((bn, D), lambda i, j: (j, 0))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(points, centers)

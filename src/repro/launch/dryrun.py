@@ -1,0 +1,177 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-importing import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each runnable cell this lowers the train/prefill/decode step with
+ShapeDtypeStruct stand-ins (no allocation), compiles it against the production
+mesh, prints ``memory_analysis()`` (proves it fits) and ``cost_analysis()``
+(FLOPs/bytes for the roofline), parses collective bytes out of the HLO, and
+appends a JSON record consumed by ``benchmarks/roofline_report.py`` and
+EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, get_config, iter_cells
+from repro.core import hlo_analysis, roofline
+from repro.launch.mesh import make_production_mesh
+from repro.models import api as mapi
+from repro.train import trainstep
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results")
+
+
+def _builder(model, shape, mesh, micro=None):
+    if shape.kind == "train":
+        fn, in_sh, out_sh, donate = trainstep.build_train_step(
+            model, shape, mesh, microbatches=micro)
+        args = (model.param_structs(), trainstep.opt_structs(model.param_structs()),
+                mapi.input_specs(model.cfg, shape))
+    elif shape.kind == "prefill":
+        fn, in_sh, out_sh, donate = trainstep.build_prefill_step(model, shape, mesh)
+        args = (model.param_structs(), mapi.input_specs(model.cfg, shape))
+    else:
+        fn, in_sh, out_sh, donate = trainstep.build_decode_step(model, shape, mesh)
+        cache, tokens, pos = trainstep.decode_inputs(model, shape)
+        args = (model.param_structs(), cache, tokens, pos)
+    return fn, in_sh, out_sh, donate, args
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
+             micro=None, overrides=None, tag="") -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.scaled(**overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = len(mesh.devices.reshape(-1))
+    model = mapi.build(cfg)
+    fn, in_sh, out_sh, donate, args = _builder(model, shape, mesh, micro=micro)
+
+    t0 = time.time()
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=donate)
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    # NOTE: xla's cost_analysis() counts while (lax.scan) bodies once; our
+    # analyzer applies loop trip counts (see core/hlo_analysis.py docstring).
+    hlo = hlo_analysis.analyze(txt)
+
+    mf = roofline.model_flops(cfg, shape)
+    rl = roofline.Roofline(
+        flops=hlo["flops"],
+        hbm_bytes=hlo["hbm_bytes"],
+        ici_bytes=hlo["ici_bytes"],
+        model_flops=mf,
+        chips=chips,
+    )
+    hbm_used = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    rec = {
+        "arch": arch, "shape": shape_name, "tag": tag,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "per_device": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "hbm_used_bytes": hbm_used,
+            "fits_16GB": bool(hbm_used < 16e9),
+            "flops": hlo["flops"],
+            "hbm_bytes_accessed": hlo["hbm_bytes"],
+            "ici_bytes": hlo["ici_bytes"],
+            "ici_by_op": hlo["by_op"],
+            "static_collectives": hlo["static_collective_count"],
+            "xla_cost_flops_unscaled": float(cost.get("flops", 0.0)),
+            "xla_cost_bytes_unscaled": float(cost.get("bytes accessed", 0.0)),
+        },
+        "model_flops": mf,
+        "roofline": rl.row(),
+    }
+    if verbose:
+        print(f"[{arch} x {shape_name} x {rec['mesh']}] "
+              f"compile={t_compile:.1f}s "
+              f"hbm={hbm_used/2**30:.2f}GiB fits={rec['per_device']['fits_16GB']} "
+              f"flops={rec['per_device']['flops']:.3e} "
+              f"ici={hlo['ici_bytes']:.3e}B bound={rl.bound} "
+              f"frac={rl.mfu_bound:.3f}")
+        print("  memory_analysis:", mem)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="both", choices=("single", "multi", "both"))
+    ap.add_argument("--micro", type=int, default=None)
+    ap.add_argument("--ssm-chunk", type=int, default=None)
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--cache-dtype", default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=os.path.join(RESULTS, "dryrun.jsonl"))
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    cells = []
+    if args.all:
+        for cfg, shape, ok, why in iter_cells():
+            if ok:
+                cells.append((cfg.name, shape.name))
+            else:
+                print(f"SKIP {cfg.name} x {shape.name}: {why}")
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    with open(args.out, "a") as f:
+        for arch, shape_name in cells:
+            for multi in meshes:
+                try:
+                    overrides = {}
+                    if args.ssm_chunk:
+                        overrides["ssm_chunk"] = args.ssm_chunk
+                    if args.cache_dtype:
+                        overrides["cache_dtype"] = args.cache_dtype
+                    if args.attn_chunk:
+                        from repro.models import layers as _L
+                        _L.ATTN_CHUNK = args.attn_chunk
+                    rec = run_cell(arch, shape_name, multi, micro=args.micro,
+                                   overrides=overrides, tag=args.tag)
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+                except Exception:
+                    failures += 1
+                    print(f"FAILED {arch} x {shape_name} multi={multi}")
+                    traceback.print_exc()
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

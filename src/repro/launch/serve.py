@@ -1,0 +1,55 @@
+"""Production serving launcher.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke
+
+--smoke serves the reduced config on local devices with synthetic requests;
+on hardware, drop --smoke to shard over the production mesh (prefill/decode
+step builders in repro.train.trainstep carry the shardings).
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build
+from repro.serve.engine import Request, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    model = build(cfg)
+    params = model.init(jax.random.key(0))
+    extra = None
+    if cfg.family == "encdec":
+        extra = {"frames": jax.random.normal(
+            jax.random.key(1), (args.batch_size, cfg.num_frames, cfg.d_model))}
+    if cfg.family == "vlm":
+        extra = {"patches": jax.random.normal(
+            jax.random.key(1), (args.batch_size, cfg.num_patches, cfg.d_model))}
+    engine = ServeEngine(model, params, args.batch_size, max_seq=64, extra=extra)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        engine.submit(Request(
+            uid=i,
+            prompt=rng.integers(0, cfg.vocab_size, rng.integers(3, 10)).astype(np.int32),
+            max_new_tokens=args.max_new_tokens))
+    t0 = time.time()
+    done = engine.run()
+    tok = sum(len(r.out_tokens) for r in done)
+    print(f"{len(done)} requests, {tok} tokens, {tok/(time.time()-t0):.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b \
+        --shape train_4k [--multi-pod] [--steps N] [--smoke]
+
+On real hardware this runs against the production mesh; with --smoke it runs
+the reduced config on the local devices (CI / laptop path).  Fault tolerance
+(checkpoint/restart/retry) comes from repro.train.loop.
+"""
+import argparse
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import InputShape
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import build
+from repro.train.loop import LoopConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on local devices")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+        shape = InputShape("smoke", 32, 8, "train")
+        mesh = None
+    else:
+        shape = SHAPES[args.shape]
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    model = build(cfg)
+    state = train(model, shape, mesh,
+                  loop_cfg=LoopConfig(total_steps=args.steps,
+                                      ckpt_every=max(args.steps // 4, 1),
+                                      ckpt_dir=args.ckpt))
+    print(f"done: {state.step} steps, final loss {state.losses[-1]:.4f}, "
+          f"restarts {state.restarts}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models.api import Model, batch_logical, build, input_specs

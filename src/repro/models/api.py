@@ -1,0 +1,120 @@
+"""Unified model API: build(cfg) -> Model with init / loss / prefill / decode.
+
+Every assigned architecture is reachable through this one interface; the
+launcher, dry-run, trainer and server never special-case a family beyond the
+input signature differences captured by ``input_specs``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import layers as L
+from repro.models import encdec, hybrid, moe, ssm, transformer, vlm
+
+_FAMILY = {
+    "dense": transformer,
+    "moe": moe,
+    "ssm": ssm,
+    "hybrid": hybrid,
+    "encdec": encdec,
+    "vlm": vlm,
+}
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    mod: Any
+
+    # ---- parameters -------------------------------------------------------
+    def defs(self):
+        return self.mod.model_defs(self.cfg)
+
+    def init(self, key):
+        return L.init_params(self.defs(), key, self.cfg.jnp_dtype)
+
+    def param_structs(self):
+        return L.param_structs(self.defs(), self.cfg.jnp_dtype)
+
+    def param_logical(self):
+        return L.param_logical(self.defs())
+
+    # ---- training ---------------------------------------------------------
+    def loss(self, params, batch):
+        return self.mod.loss_fn(params, batch, self.cfg)
+
+    # ---- serving ----------------------------------------------------------
+    def prefill(self, params, batch, max_seq):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return self.mod.prefill(params, batch["frames"], batch["tokens"], cfg, max_seq)
+        if cfg.family == "vlm":
+            return self.mod.prefill(params, batch["patches"], batch["tokens"], cfg, max_seq)
+        return self.mod.prefill(params, batch["tokens"], cfg, max_seq)
+
+    def decode_step(self, params, cache, tokens, pos):
+        return self.mod.decode_step(params, cache, tokens, pos, self.cfg)
+
+    def init_cache(self, batch, max_seq):
+        return self.mod.init_cache(self.cfg, batch, max_seq, self.cfg.jnp_dtype)
+
+    def cache_logical(self):
+        return self.mod.cache_logical(self.cfg)
+
+    def cache_structs(self, batch, max_seq):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_seq))
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(cfg, _FAMILY[cfg.family])
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; never allocate)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Stand-ins for every model input of the given shape cell."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = lambda s: jax.ShapeDtypeStruct((B, s), jnp.int32)
+    dt = cfg.jnp_dtype
+    if shape.kind == "train":
+        batch = {"tokens": tok(S), "labels": tok(S)}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct((B, cfg.num_frames, cfg.d_model), dt)
+        if cfg.family == "vlm":
+            P = cfg.num_patches
+            batch = {"tokens": tok(S - P), "labels": tok(S - P),
+                     "patches": jax.ShapeDtypeStruct((B, P, cfg.d_model), dt)}
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": tok(S)}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct((B, cfg.num_frames, cfg.d_model), dt)
+        if cfg.family == "vlm":
+            P = cfg.num_patches
+            batch = {"tokens": tok(S - P),
+                     "patches": jax.ShapeDtypeStruct((B, P, cfg.d_model), dt)}
+        return batch
+    if shape.kind == "decode":
+        return {"tokens": tok(1)}
+    raise ValueError(shape.kind)
+
+
+def batch_logical(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Logical axes for the input batch (data-parallel over batch dim)."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, v in specs.items():
+        if k in ("tokens", "labels"):
+            out[k] = ("batch", None)
+        elif k in ("frames", "patches"):
+            out[k] = ("batch", None, None)
+        else:
+            out[k] = tuple([None] * len(v.shape))
+    return out

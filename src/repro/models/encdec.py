@@ -1,0 +1,218 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is STUBBED per the assignment: ``input_specs`` provides
+precomputed frame embeddings [B, num_frames, d_model].  Positions use
+sinusoidal embeddings (adaptation: whisper uses sinusoidal-encoder /
+learned-decoder; we use sinusoidal for both so parameters are independent of
+the input-shape cell).  Decoder blocks: causal self-attention (KV cache at
+serve time) + cross-attention over encoder output + MLP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constraint
+from repro.models import layers as L
+from repro.models.layers import PD
+from repro.models.transformer import stacked
+
+
+def sinusoid(positions, d_model, dtype):
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10000.0) / max(half - 1, 1)))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def enc_block_defs(cfg):
+    return {
+        "attn_norm": PD((cfg.d_model,), ("embed",), "ones"),
+        "attn": L.attention_defs(cfg),
+        "mlp_norm": PD((cfg.d_model,), ("embed",), "ones"),
+        "mlp": L.mlp_defs(cfg),
+    }
+
+
+def dec_block_defs(cfg):
+    return {
+        "self_norm": PD((cfg.d_model,), ("embed",), "ones"),
+        "self_attn": L.attention_defs(cfg),
+        "cross_norm": PD((cfg.d_model,), ("embed",), "ones"),
+        "cross_attn": L.attention_defs(cfg),
+        "mlp_norm": PD((cfg.d_model,), ("embed",), "ones"),
+        "mlp": L.mlp_defs(cfg),
+    }
+
+
+def model_defs(cfg):
+    return {
+        "embed": L.embed_defs(cfg),
+        "enc_blocks": stacked(enc_block_defs(cfg), cfg.encoder_layers),
+        "enc_norm": PD((cfg.d_model,), ("embed",), "ones"),
+        "dec_blocks": stacked(dec_block_defs(cfg), cfg.num_layers),
+        "final_norm": PD((cfg.d_model,), ("embed",), "ones"),
+    }
+
+
+def encode(params, frames, cfg):
+    """frames [B,F,D] (stub embeddings) -> encoder hidden [B,F,D]."""
+    dtype = cfg.jnp_dtype
+    B, F, _ = frames.shape
+    h = frames.astype(dtype) + sinusoid(jnp.arange(F)[None], cfg.d_model, dtype)
+    positions = jnp.arange(F)[None, :]
+
+    def body(h, bp):
+        bp = L.fsdp_gather(bp, enc_block_defs(cfg))
+        a, _ = L.attention_fwd(bp["attn"], L.rmsnorm(h, bp["attn_norm"], cfg.norm_eps),
+                               cfg, positions=positions, causal=False)
+        h = h + a
+        h = h + L.mlp_fwd(bp["mlp"], L.rmsnorm(h, bp["mlp_norm"], cfg.norm_eps))
+        return constraint(h, ("batch", "seq_sp", None)), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["enc_blocks"])
+    return L.rmsnorm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block(bp, h, enc_kv, cfg, positions):
+    a, _ = L.attention_fwd(bp["self_attn"], L.rmsnorm(h, bp["self_norm"], cfg.norm_eps),
+                           cfg, positions=positions, causal=True)
+    h = h + a
+    c, _ = L.attention_fwd(bp["cross_attn"], L.rmsnorm(h, bp["cross_norm"], cfg.norm_eps),
+                           cfg, positions=positions, kv=enc_kv)
+    h = h + c
+    h = h + L.mlp_fwd(bp["mlp"], L.rmsnorm(h, bp["mlp_norm"], cfg.norm_eps))
+    return constraint(h, ("batch", "seq_sp", None))
+
+
+def _cross_kv(bp, enc_out, cfg):
+    """Precompute cross-attention K/V from encoder output."""
+    B, F, _ = enc_out.shape
+    k = (enc_out @ bp["cross_attn"]["wk"])
+    v = (enc_out @ bp["cross_attn"]["wv"])
+    if "bk" in bp["cross_attn"]:
+        k, v = k + bp["cross_attn"]["bk"], v + bp["cross_attn"]["bv"]
+    k = k.reshape(B, F, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, F, cfg.num_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def forward(params, frames, tokens, cfg):
+    enc_out = encode(params, frames, cfg)
+    dtype = cfg.jnp_dtype
+    B, Sq = tokens.shape
+    h = L.embed_fwd(params["embed"], tokens, dtype)
+    h = h + sinusoid(jnp.arange(Sq)[None], cfg.d_model, dtype)
+    positions = jnp.arange(Sq)[None, :]
+
+    def body(h, bp):
+        bp = L.fsdp_gather(bp, dec_block_defs(cfg))
+        kv = _cross_kv(bp, enc_out, cfg)
+        return _dec_block(bp, h, kv, cfg, positions), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["dec_blocks"])
+    return L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(params, batch, cfg):
+    h = forward(params, batch["frames"], batch["tokens"], cfg)
+    logits = L.unembed_fwd(params["embed"], h)
+    return L.cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+
+
+def init_cache(cfg, batch, max_seq, dtype):
+    F = cfg.num_frames
+    cdt = jnp.dtype(cfg.cache_dtype)
+    return {
+        "k": jnp.zeros((cfg.num_layers, batch, max_seq, cfg.num_kv_heads, cfg.head_dim), cdt),
+        "v": jnp.zeros((cfg.num_layers, batch, max_seq, cfg.num_kv_heads, cfg.head_dim), cdt),
+        "xk": jnp.zeros((cfg.num_layers, batch, F, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "xv": jnp.zeros((cfg.num_layers, batch, F, cfg.num_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def cache_logical(cfg):
+    kv = ("layers", "batch", "seq_kv", "kv_heads", None)
+    xkv = ("layers", "batch", None, "kv_heads", None)
+    return {"k": kv, "v": kv, "xk": xkv, "xv": xkv}
+
+
+def prefill(params, frames, tokens, cfg, max_seq):
+    """Encode audio + run prompt tokens; returns (logits, cache incl. cross-KV)."""
+    enc_out = encode(params, frames, cfg)
+    dtype = cfg.jnp_dtype
+    B, Sq = tokens.shape
+    h = L.embed_fwd(params["embed"], tokens, dtype)
+    h = h + sinusoid(jnp.arange(Sq)[None], cfg.d_model, dtype)
+    positions = jnp.arange(Sq)[None, :]
+
+    def body(h, bp):
+        bp = L.fsdp_gather(bp, dec_block_defs(cfg))
+        xk, xv = _cross_kv(bp, enc_out, cfg)
+        a, (k, v) = L.attention_fwd(
+            bp["self_attn"], L.rmsnorm(h, bp["self_norm"], cfg.norm_eps), cfg,
+            positions=positions, causal=True)
+        h = h + a
+        c, _ = L.attention_fwd(bp["cross_attn"], L.rmsnorm(h, bp["cross_norm"], cfg.norm_eps),
+                               cfg, positions=positions, kv=(xk, xv))
+        h = h + c
+        h = h + L.mlp_fwd(bp["mlp"], L.rmsnorm(h, bp["mlp_norm"], cfg.norm_eps))
+        return h, (k, v, xk, xv)
+
+    h, (k_all, v_all, xk_all, xv_all) = jax.lax.scan(body, h, params["dec_blocks"])
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed_fwd(params["embed"], h[:, -1:])
+    pad = max_seq - Sq
+    cache = {
+        "k": jnp.pad(k_all, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "v": jnp.pad(v_all, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "xk": xk_all, "xv": xv_all,
+    }
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, pos, cfg):
+    dtype = cfg.jnp_dtype
+    h = L.embed_fwd(params["embed"], tokens, dtype)
+    h = h + sinusoid(jnp.full((1, 1), pos, jnp.int32), cfg.d_model, dtype)
+
+    def body(h, layer):
+        bp, ck, cv, xk, xv = layer
+        bp = L.fsdp_gather(bp, dec_block_defs(cfg))
+        a, ck, cv = L.attention_decode(
+            bp["self_attn"], L.rmsnorm(h, bp["self_norm"], cfg.norm_eps), cfg, ck, cv, pos)
+        h = h + a
+        # cross attention against fixed encoder K/V
+        hn = L.rmsnorm(h, bp["cross_norm"], cfg.norm_eps)
+        q = (hn @ bp["cross_attn"]["wq"])
+        if "bq" in bp["cross_attn"]:
+            q = q + bp["cross_attn"]["bq"]
+        B = h.shape[0]
+        q = q.reshape(B, 1, cfg.num_heads, cfg.head_dim)
+        kk, vv = L._repeat_kv(xk.astype(dtype), xv.astype(dtype), cfg)
+        c = L._exact_attn(q, kk, vv, causal=False)
+        c = c.reshape(B, 1, cfg.num_heads * cfg.head_dim) @ bp["cross_attn"]["wo"]
+        h = h + c
+        h = h + L.mlp_fwd(bp["mlp"], L.rmsnorm(h, bp["mlp_norm"], cfg.norm_eps))
+        return h, (ck, cv)
+
+    def scan_body(carry, xs):
+        h, ck_all, cv_all, i = carry
+        bp, xk, xv = xs
+        ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
+        h, (ck, cv) = body(h, (bp, ck, cv, xk, xv))
+        ck_all = jax.lax.dynamic_update_slice_in_dim(ck_all, ck[None], i, 0)
+        cv_all = jax.lax.dynamic_update_slice_in_dim(cv_all, cv[None], i, 0)
+        return (h, ck_all, cv_all, i + 1), None
+
+    (h, ck_all, cv_all, _), _ = jax.lax.scan(
+        scan_body, (h, cache["k"], cache["v"], jnp.int32(0)),
+        (params["dec_blocks"], cache["xk"], cache["xv"]))
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed_fwd(params["embed"], h)
+    return logits, {"k": ck_all, "v": cv_all, "xk": cache["xk"], "xv": cache["xv"]}

@@ -1,0 +1,206 @@
+"""Jamba-style hybrid: Mamba+attention 1:7 interleave with MoE FFNs.
+
+The layer stack is periodic (period = ``attn_period``): one attention mixer per
+period (at ``attn_offset``), SSD mixers elsewhere; MoE FFN every
+``moe_every``-th position, dense FFN otherwise.  We scan over periods (HLO size
+is period-sized, not depth-sized); within the scan body the 8 sublayers are an
+unrolled static loop over the period layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constraint
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.layers import PD
+from repro.models.transformer import stacked
+
+
+def layout(cfg):
+    """[(mixer, ffn)] per position in one period."""
+    out = []
+    for i in range(cfg.attn_period):
+        mixer = "attn" if i == cfg.attn_offset else "mamba"
+        ffn = "moe" if (cfg.num_experts and i % cfg.moe_every == 1) else "dense"
+        out.append((mixer, ffn))
+    return out
+
+
+def _pos_defs(cfg, mixer, ffn):
+    d = {"mixer_norm": PD((cfg.d_model,), ("embed",), "ones"),
+         "ffn_norm": PD((cfg.d_model,), ("embed",), "ones")}
+    d["mixer"] = L.attention_defs(cfg) if mixer == "attn" else S.ssd_defs(cfg)
+    d["ffn"] = M.moe_defs(cfg) if ffn == "moe" else L.mlp_defs(cfg)
+    return d
+
+
+def model_defs(cfg):
+    n_periods = cfg.num_layers // cfg.attn_period
+    periods = {
+        f"pos{i}": stacked(_pos_defs(cfg, mixer, ffn), n_periods)
+        for i, (mixer, ffn) in enumerate(layout(cfg))
+    }
+    return {
+        "embed": L.embed_defs(cfg),
+        "periods": periods,
+        "final_norm": PD((cfg.d_model,), ("embed",), "ones"),
+    }
+
+
+def _apply_pos(p, h, cfg, mixer, ffn, positions):
+    p = L.fsdp_gather(p, _pos_defs(cfg, mixer, ffn))
+    hn = L.rmsnorm(h, p["mixer_norm"], cfg.norm_eps)
+    if mixer == "attn":
+        a, _ = L.attention_fwd(p["mixer"], hn, cfg, positions=positions)
+    else:
+        a = S.ssd_block_fwd(p["mixer"], hn, cfg)
+    h = h + a
+    hn = L.rmsnorm(h, p["ffn_norm"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if ffn == "moe":
+        f, aux = M.moe_fwd(p["ffn"], hn, cfg)
+    else:
+        f = L.mlp_fwd(p["ffn"], hn)
+    return constraint(h + f, ("batch", "seq_sp", None)), aux
+
+
+def forward(params, tokens, cfg):
+    h = L.embed_fwd(params["embed"], tokens, cfg.jnp_dtype)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    lay = layout(cfg)
+
+    def body(carry, period_params):
+        h, aux = carry
+        for i, (mixer, ffn) in enumerate(lay):
+            h, a = _apply_pos(period_params[f"pos{i}"], h, cfg, mixer, ffn, positions)
+            aux = aux + a
+        return (h, aux), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)), params["periods"])
+    return L.rmsnorm(h, params["final_norm"], cfg.norm_eps), aux / cfg.num_layers
+
+
+def loss_fn(params, batch, cfg, aux_weight=0.01):
+    h, aux = forward(params, batch["tokens"], cfg)
+    logits = L.unembed_fwd(params["embed"], h)
+    return L.cross_entropy(logits, batch["labels"], batch.get("loss_mask")) + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: attention positions carry KV caches; mamba positions carry states
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch, max_seq, dtype):
+    n_periods = cfg.num_layers // cfg.attn_period
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    n_mamba = sum(1 for m, _ in layout(cfg) if m == "mamba")
+    cdt = jnp.dtype(cfg.cache_dtype)
+    return {
+        "k": jnp.zeros((n_periods, batch, max_seq, cfg.num_kv_heads, cfg.head_dim), cdt),
+        "v": jnp.zeros((n_periods, batch, max_seq, cfg.num_kv_heads, cfg.head_dim), cdt),
+        "conv": jnp.zeros((n_periods, n_mamba, batch, S.CONV_K - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((n_periods, n_mamba, batch, cfg.ssm_nheads,
+                          cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+    }
+
+
+def cache_logical(cfg):
+    return {
+        "k": ("layers", "batch", "seq_kv", "kv_heads", None),
+        "v": ("layers", "batch", "seq_kv", "kv_heads", None),
+        "conv": ("layers", None, "batch", None, "ssm_inner"),
+        "ssm": ("layers", None, "batch", "ssm_heads", None, None),
+    }
+
+
+def decode_step(params, cache, tokens, pos, cfg):
+    # caches/states in the scan carry -> in-place (see transformer.decode_step)
+    h = L.embed_fwd(params["embed"], tokens, cfg.jnp_dtype)
+    lay = layout(cfg)
+
+    def body(carry, period_params):
+        h, ck_all, cv_all, conv_all, ssm_all, pi = carry
+        mi = 0
+        for i, (mixer, ffn) in enumerate(lay):
+            p = L.fsdp_gather(period_params[f"pos{i}"], _pos_defs(cfg, mixer, ffn))
+            hn = L.rmsnorm(h, p["mixer_norm"], cfg.norm_eps)
+            if mixer == "attn":
+                ck = jax.lax.dynamic_index_in_dim(ck_all, pi, 0, keepdims=False)
+                cv = jax.lax.dynamic_index_in_dim(cv_all, pi, 0, keepdims=False)
+                a, ck, cv = L.attention_decode(p["mixer"], hn, cfg, ck, cv, pos)
+                ck_all = jax.lax.dynamic_update_slice_in_dim(ck_all, ck[None], pi, 0)
+                cv_all = jax.lax.dynamic_update_slice_in_dim(cv_all, cv[None], pi, 0)
+            else:
+                conv = jax.lax.dynamic_index_in_dim(
+                    jax.lax.dynamic_index_in_dim(conv_all, pi, 0, keepdims=False),
+                    mi, 0, keepdims=False)
+                ssm = jax.lax.dynamic_index_in_dim(
+                    jax.lax.dynamic_index_in_dim(ssm_all, pi, 0, keepdims=False),
+                    mi, 0, keepdims=False)
+                a, c_i, s_i = S.ssd_decode_step(p["mixer"], hn, cfg, conv, ssm)
+                conv_all = jax.lax.dynamic_update_slice(
+                    conv_all, c_i[None, None], (pi, mi, 0, 0, 0))
+                ssm_all = jax.lax.dynamic_update_slice(
+                    ssm_all, s_i[None, None], (pi, mi, 0, 0, 0, 0))
+                mi += 1
+            h = h + a
+            hn = L.rmsnorm(h, p["ffn_norm"], cfg.norm_eps)
+            if ffn == "moe":
+                f, _ = M.moe_fwd(p["ffn"], hn, cfg)
+            else:
+                f = L.mlp_fwd(p["ffn"], hn)
+            h = h + f
+        return (h, ck_all, cv_all, conv_all, ssm_all, pi + 1), None
+
+    (h, ck_all, cv_all, conv_all, ssm_all, _), _ = jax.lax.scan(
+        body, (h, cache["k"], cache["v"], cache["conv"], cache["ssm"],
+               jnp.int32(0)), params["periods"])
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed_fwd(params["embed"], h)
+    return logits, {"k": ck_all, "v": cv_all, "conv": conv_all, "ssm": ssm_all}
+
+
+def prefill(params, tokens, cfg, max_seq):
+    h = L.embed_fwd(params["embed"], tokens, cfg.jnp_dtype)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    lay = layout(cfg)
+    B, Sq = tokens.shape
+
+    def body(h, period_params):
+        ks = vs = None
+        states = []
+        for i, (mixer, ffn) in enumerate(lay):
+            p = L.fsdp_gather(period_params[f"pos{i}"], _pos_defs(cfg, mixer, ffn))
+            hn = L.rmsnorm(h, p["mixer_norm"], cfg.norm_eps)
+            if mixer == "attn":
+                a, (ks, vs) = L.attention_fwd(p["mixer"], hn, cfg, positions=positions)
+            else:
+                a, st = S.ssd_block_fwd(p["mixer"], hn, cfg, return_state=True)
+                states.append(st)
+            h = h + a
+            hn = L.rmsnorm(h, p["ffn_norm"], cfg.norm_eps)
+            f = M.moe_fwd(p["ffn"], hn, cfg)[0] if ffn == "moe" else L.mlp_fwd(p["ffn"], hn)
+            h = constraint(h + f, ("batch", "seq_sp", None))
+        return h, (ks, vs, jnp.stack(states))
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, (k_all, v_all, ssm_all) = jax.lax.scan(body, h, params["periods"])
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed_fwd(params["embed"], h[:, -1:])
+    pad = max_seq - Sq
+    n_periods = cfg.num_layers // cfg.attn_period
+    n_mamba = sum(1 for m, _ in lay if m == "mamba")
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    cache = {
+        "k": jnp.pad(k_all, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "v": jnp.pad(v_all, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "conv": jnp.zeros((n_periods, n_mamba, B, S.CONV_K - 1, conv_dim), cfg.jnp_dtype),
+        "ssm": ssm_all.astype(jnp.float32),
+    }
+    return logits, cache

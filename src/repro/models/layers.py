@@ -1,0 +1,308 @@
+"""Shared model components: param-def framework, norms, RoPE, attention, MLP.
+
+Parameters are declared as ``PD(shape, logical, init)`` leaves in nested dicts.
+``init_params`` materializes them, ``param_structs`` gives ShapeDtypeStructs for
+the dry-run, ``param_logical`` gives the logical-axis tree the sharding rules
+consume.  Attention is chunked/online-softmax for long sequences so the
+*baseline* memory term stays within HBM (the Pallas flash kernel is the
+hillclimbed version).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constraint
+
+
+class PD(NamedTuple):
+    shape: tuple
+    logical: tuple
+    init: str = "normal"     # normal | zeros | ones
+    scale: Optional[float] = None  # stddev override (default: fan-in)
+
+
+def _is_pd(x):
+    return isinstance(x, PD)
+
+
+def init_params(defs, key, dtype):
+    flat, treedef = jax.tree.flatten(defs, is_leaf=_is_pd)
+    keys = jax.random.split(key, len(flat))
+    out = []
+    for k, pd in zip(keys, flat):
+        if pd.init == "zeros":
+            out.append(jnp.zeros(pd.shape, dtype))
+        elif pd.init == "ones":
+            out.append(jnp.ones(pd.shape, dtype))
+        else:
+            fan_in = pd.shape[-2] if len(pd.shape) >= 2 else pd.shape[-1]
+            scale = pd.scale if pd.scale is not None else fan_in ** -0.5
+            out.append((jax.random.normal(k, pd.shape) * scale).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_structs(defs, dtype):
+    return jax.tree.map(
+        lambda pd: jax.ShapeDtypeStruct(pd.shape, dtype), defs, is_leaf=_is_pd)
+
+
+def param_logical(defs):
+    return jax.tree.map(lambda pd: pd.logical, defs, is_leaf=_is_pd)
+
+
+# ---------------------------------------------------------------------------
+# Norms / RoPE
+# ---------------------------------------------------------------------------
+
+def fsdp_gather(block_params, block_defs):
+    """Undo FSDP (data-axis) sharding on a block's params *inside* the scan body.
+
+    Without this, GSPMD hoists the weight all-gathers out of the microbatch
+    loop and materializes every layer's gathered weights at once (26 GiB for
+    mistral-123b).  Constraining the per-layer slice keeps the gather inside
+    the loop: one layer's weights live at a time.  TP sharding is preserved —
+    only the "embed" (fsdp) axis is dropped.
+    """
+    logical = param_logical(block_defs)
+    return jax.tree.map(
+        lambda x, lg: constraint(x, lg, rules={"embed": None}), block_params, logical)
+
+
+def rmsnorm(x, w, eps):
+    x32 = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * rms).astype(x.dtype) * w
+
+
+def rope_tables(positions, head_dim, theta, dtype):
+    """positions: int32 [...]; returns cos/sin [..., head_dim//2]."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x, cos, sin):
+    """x: [..., S, H, D]; cos/sin: [..., S, D//2] broadcast over heads."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c, s = cos[..., None, :], sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+ATTN_CHUNK = 1024          # online-softmax KV/Q chunk for long sequences
+EXACT_ATTN_MAX_SEQ = 2048  # below this, materialize scores exactly
+
+
+def attention_defs(cfg, d_model=None):
+    d = d_model or cfg.d_model
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    defs = {
+        "wq": PD((d, H * hd), ("embed", "heads")),
+        "wk": PD((d, KV * hd), ("embed", "kv_heads")),
+        "wv": PD((d, KV * hd), ("embed", "kv_heads")),
+        "wo": PD((H * hd, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = PD((H * hd,), ("heads",), "zeros")
+        defs["bk"] = PD((KV * hd,), ("kv_heads",), "zeros")
+        defs["bv"] = PD((KV * hd,), ("kv_heads",), "zeros")
+    return defs
+
+
+def _project_qkv(p, h, cfg):
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = h @ p["wq"]
+    k = h @ p["wk"]
+    v = h @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    B, S = h.shape[:2]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    return q, k, v
+
+
+def _repeat_kv(k, v, cfg):
+    g = cfg.num_heads // cfg.num_kv_heads
+    if g > 1:
+        k = jnp.repeat(k, g, axis=-2)
+        v = jnp.repeat(v, g, axis=-2)
+    return k, v
+
+
+def _exact_attn(q, k, v, causal, q_offset=0, kv_len=None):
+    """q [B,Sq,H,D], k/v [B,Sk,H,D]."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    Sq, Sk = q.shape[1], k.shape[1]
+    if kv_len is not None:  # decode against a cache filled up to kv_len
+        mask = jnp.arange(Sk)[None, :] < (kv_len[:, None] if kv_len.ndim else kv_len)
+        s = jnp.where(mask[:, None, None, :] if kv_len.ndim else mask[None, None],
+                      s, -1e30)
+    if causal:
+        qi = jnp.arange(Sq) + q_offset
+        ki = jnp.arange(Sk)
+        s = jnp.where((ki[None, :] <= qi[:, None])[None, None], s, -1e30)
+    a = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", a, v)
+
+
+def _chunked_attn(q, k, v, causal):
+    """Online-softmax attention, lax.scan over KV chunks (flash-style in XLA).
+
+    Keeps the baseline memory roofline term honest for 32k-token prefill:
+    no [Sq, Sk] score tensor is ever materialized beyond a chunk.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    ck = min(ATTN_CHUNK, Sk)
+    if Sk % ck:  # pad KV to a chunk multiple; padded keys are masked below
+        pad = ck - Sk % ck
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nk = k.shape[1] // ck
+    scale = D ** -0.5
+    kc = k.reshape(B, nk, ck, H, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, ck, H, D).transpose(1, 0, 2, 3, 4)
+    qi = jnp.arange(Sq)
+
+    def body(carry, kv):
+        (acc, m, l), (kb, vb, j) = carry, kv
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kb).astype(jnp.float32) * scale
+        ki = j * ck + jnp.arange(ck)
+        if causal:
+            s = jnp.where((ki[None, :] <= qi[:, None])[None, None], s, -1e30)
+        else:
+            s = jnp.where((ki < Sk)[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vb).astype(jnp.float32)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (kc, vc, jnp.arange(nk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attention_fwd(p, h, cfg, *, positions, causal=True, kv=None):
+    """Full-sequence attention (train / prefill).  Returns (out, (k, v))."""
+    q, k, v = _project_qkv(p, h, cfg)
+    if cfg.rope_theta > 0:
+        cos, sin = rope_tables(positions, cfg.head_dim, cfg.rope_theta, h.dtype)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    cache_kv = (k, v)
+    if kv is not None:  # cross-attention: use provided memory k/v
+        k, v = kv
+        cache_kv = kv
+        causal = False
+    k2, v2 = _repeat_kv(k, v, cfg)
+    q = constraint(q, ("batch", None, "heads", None))
+    if max(q.shape[1], k2.shape[1]) <= EXACT_ATTN_MAX_SEQ:
+        out = _exact_attn(q, k2, v2, causal)
+    else:
+        out = _chunked_attn(q, k2, v2, causal)
+    out = out.reshape(*h.shape[:2], cfg.num_heads * cfg.head_dim)
+    return out @ p["wo"], cache_kv
+
+
+def attention_decode(p, h, cfg, cache_k, cache_v, pos):
+    """Single-token decode. h [B,1,D]; cache [B,Smax,KV,hd]; pos scalar int.
+
+    The cache write is a one-hot select rather than dynamic-update-slice: DUS
+    on the sequence-sharded cache makes GSPMD all-gather the whole cache every
+    step (66 GB/step measured for llama3 decode_32k); the one-hot form is
+    elementwise on the sharded dim so each shard updates locally.  The cost is
+    a full cache rewrite (decode is HBM-bound regardless); the shard_map
+    in-place variant is the hillclimbed version (distributed/collectives.py).
+    """
+    q, k, v = _project_qkv(p, h, cfg)
+    if cfg.rope_theta > 0:
+        posv = jnp.full((h.shape[0], 1), pos, jnp.int32)
+        cos, sin = rope_tables(posv, cfg.head_dim, cfg.rope_theta, h.dtype)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    from repro.distributed import collectives, sharding as shd
+    mesh = shd.active_mesh()
+    if mesh is not None and collectives.applicable(
+            mesh, h.shape[0], cache_k.shape[1], cfg.num_heads, cfg.num_kv_heads):
+        out, cache_k, cache_v = collectives.flash_decode_attention(
+            q, cache_k, cache_v, k, v, pos, mesh)
+    else:
+        sel = (jnp.arange(cache_k.shape[1]) == pos)[None, :, None, None]
+        cache_k = jnp.where(sel, k.astype(cache_k.dtype), cache_k)
+        cache_v = jnp.where(sel, v.astype(cache_v.dtype), cache_v)
+        kk, vv = _repeat_kv(cache_k.astype(h.dtype), cache_v.astype(h.dtype), cfg)
+        out = _exact_attn(q, kk, vv, causal=False, kv_len=jnp.asarray(pos + 1))
+    out = out.reshape(h.shape[0], 1, cfg.num_heads * cfg.head_dim)
+    return out @ p["wo"], cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_defs(cfg, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "w1": PD((d, f), ("embed", "ff")),
+        "w3": PD((d, f), ("embed", "ff")),
+        "w2": PD((f, d), ("ff", "embed")),
+    }
+
+
+def mlp_fwd(p, h):
+    g = jax.nn.silu(h @ p["w1"]) * (h @ p["w3"])
+    return g @ p["w2"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_defs(cfg):
+    v = cfg.padded_vocab
+    defs = {"embedding": PD((v, cfg.d_model), ("vocab", "embed"), scale=1.0)}
+    if not cfg.tie_embeddings:
+        defs["unembed"] = PD((cfg.d_model, v), ("embed", "vocab"))
+    return defs
+
+
+def embed_fwd(p, tokens, dtype):
+    return p["embedding"].astype(dtype)[tokens]
+
+
+def unembed_fwd(p, h):
+    w = p.get("unembed")
+    if w is None:
+        w = p["embedding"].T.astype(h.dtype)
+    logits = (h @ w).astype(jnp.float32)
+    # vocab-sharded logits: keeps the [V, D] unembedding gradient from being
+    # materialized replicated (1.6 GB f32 per device for mistral-123b).
+    return constraint(logits, ("batch", None, "vocab"))
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logits [B,S,V] fp32, labels [B,S] int32; mean NLL over valid tokens."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(nll.dtype)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

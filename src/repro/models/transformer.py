@@ -1,0 +1,155 @@
+"""Dense decoder-only transformer (llama3 / mistral / qwen family).
+
+Layers are stacked on a leading ``layers`` axis and driven by ``lax.scan`` so
+HLO size (and compile time) is depth-independent; each block is optionally
+``jax.checkpoint``-ed (remat) so the 4k-train activations fit HBM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constraint
+from repro.models import layers as L
+from repro.models.layers import PD
+
+
+def block_defs(cfg):
+    return {
+        "attn_norm": PD((cfg.d_model,), ("embed",), "ones"),
+        "attn": L.attention_defs(cfg),
+        "mlp_norm": PD((cfg.d_model,), ("embed",), "ones"),
+        "mlp": L.mlp_defs(cfg),
+    }
+
+
+def stacked(defs, n):
+    return jax.tree.map(
+        lambda pd: PD((n,) + pd.shape, ("layers",) + pd.logical, pd.init, pd.scale),
+        defs, is_leaf=lambda x: isinstance(x, PD))
+
+
+def model_defs(cfg):
+    return {
+        "embed": L.embed_defs(cfg),
+        "blocks": stacked(block_defs(cfg), cfg.num_layers),
+        "final_norm": PD((cfg.d_model,), ("embed",), "ones"),
+    }
+
+
+def block_fwd(p, h, cfg, positions):
+    p = L.fsdp_gather(p, block_defs(cfg))
+    a, _ = L.attention_fwd(p["attn"], L.rmsnorm(h, p["attn_norm"], cfg.norm_eps),
+                           cfg, positions=positions)
+    h = h + a
+    h = constraint(h, ("batch", "seq_sp", None))
+    m = L.mlp_fwd(p["mlp"], L.rmsnorm(h, p["mlp_norm"], cfg.norm_eps))
+    h = h + m
+    return constraint(h, ("batch", "seq_sp", None))
+
+
+def forward(params, tokens, cfg):
+    """tokens [B,S] -> hidden [B,S,D] (pre-unembed)."""
+    dtype = cfg.jnp_dtype
+    h = L.embed_fwd(params["embed"], tokens, dtype)
+    h = constraint(h, ("batch", "seq_sp", None))
+    positions = jnp.arange(tokens.shape[1])[None, :]
+
+    def body(h, bp):
+        return block_fwd(bp, h, cfg, positions), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    if cfg.scan_layers:
+        h, _ = jax.lax.scan(body, h, params["blocks"])
+    else:
+        for i in range(cfg.num_layers):
+            h, _ = body(h, jax.tree.map(lambda x: x[i], params["blocks"]))
+    return L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(params, batch, cfg):
+    h = forward(params, batch["tokens"], cfg)
+    logits = L.unembed_fwd(params["embed"], h)
+    return L.cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch, max_seq, dtype):
+    del dtype  # storage dtype comes from cfg (fp8 KV quantization for MHA)
+    cdt = jnp.dtype(cfg.cache_dtype)
+    kv = {
+        "k": jnp.zeros((cfg.num_layers, batch, max_seq, cfg.num_kv_heads, cfg.head_dim), cdt),
+        "v": jnp.zeros((cfg.num_layers, batch, max_seq, cfg.num_kv_heads, cfg.head_dim), cdt),
+    }
+    return kv
+
+
+def cache_logical(cfg):
+    ax = ("layers", "batch", "seq_kv", "kv_heads", None)
+    return {"k": ax, "v": ax}
+
+
+def prefill(params, tokens, cfg, max_seq):
+    """Run the full prompt; return (last-position logits, filled cache)."""
+    dtype = cfg.jnp_dtype
+    B, S = tokens.shape
+    h = L.embed_fwd(params["embed"], tokens, dtype)
+    positions = jnp.arange(S)[None, :]
+    ks, vs = [], []
+
+    def body(h, bp):
+        bp = L.fsdp_gather(bp, block_defs(cfg))
+        a, (k, v) = L.attention_fwd(
+            bp["attn"], L.rmsnorm(h, bp["attn_norm"], cfg.norm_eps), cfg,
+            positions=positions)
+        h = h + a
+        h = h + L.mlp_fwd(bp["mlp"], L.rmsnorm(h, bp["mlp_norm"], cfg.norm_eps))
+        return constraint(h, ("batch", "seq_sp", None)), (k, v)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, (k_all, v_all) = jax.lax.scan(body, h, params["blocks"])
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed_fwd(params["embed"], h[:, -1:])
+    pad = max_seq - S
+    cache = {
+        "k": jnp.pad(k_all, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "v": jnp.pad(v_all, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+    }
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, pos, cfg):
+    """tokens [B,1]; pos scalar int32 (current position). Returns (logits, cache).
+
+    The cache lives in the scan CARRY (xs->ys scanning double-buffers it, and
+    unrolled chained updates interleaved with shard_map leave ~3x cache copies
+    in temps — both measured).  Carry + dynamic_update_slice aliases to zero
+    temp overhead; the per-layer slice passes through the shard_map
+    flash-decode (distributed/collectives.py) which updates it in place.
+    """
+    dtype = cfg.jnp_dtype
+    h = L.embed_fwd(params["embed"], tokens, dtype)
+
+    def body(carry, bp):
+        h, ck_all, cv_all, i = carry
+        bp = L.fsdp_gather(bp, block_defs(cfg))
+        ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
+        a, ck, cv = L.attention_decode(
+            bp["attn"], L.rmsnorm(h, bp["attn_norm"], cfg.norm_eps), cfg, ck, cv, pos)
+        ck_all = jax.lax.dynamic_update_slice_in_dim(ck_all, ck[None], i, 0)
+        cv_all = jax.lax.dynamic_update_slice_in_dim(cv_all, cv[None], i, 0)
+        h = h + a
+        h = h + L.mlp_fwd(bp["mlp"], L.rmsnorm(h, bp["mlp_norm"], cfg.norm_eps))
+        return (h, ck_all, cv_all, i + 1), None
+
+    (h, ck_all, cv_all, _), _ = jax.lax.scan(
+        body, (h, cache["k"], cache["v"], jnp.int32(0)), params["blocks"])
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed_fwd(params["embed"], h)
+    return logits, {"k": ck_all, "v": cv_all}

@@ -1,0 +1,83 @@
+"""Batched serving engine: continuous-batching prefill/decode driver.
+
+Requests queue up; the engine prefills prompts into KV-cache slots, then
+decodes the batch in lock-step, retiring finished sequences and backfilling
+from the queue (continuous batching at wave granularity).  All device work
+goes through the jitted prefill/decode steps, so the same engine drives a
+smoke model on CPU and the production mesh on TPU.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # [S] int32
+    max_new_tokens: int = 16
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+def serve_batch(model, params, prompts, max_new_tokens: int, max_seq: int,
+                extra: dict | None = None) -> list[list[int]]:
+    """Greedy batched generation."""
+    B = len(prompts)
+    S = max(len(p) for p in prompts)
+    toks = np.zeros((B, S), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, S - len(p):] = p                  # left-pad
+    batch = {"tokens": jnp.asarray(toks)}
+    if extra:
+        batch.update(extra)
+    logits, cache = model.prefill(params, batch, max_seq)
+    decode = jax.jit(model.decode_step)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    outs = [[] for _ in prompts]
+    pos = S if model.cfg.family != "vlm" else S + model.cfg.num_patches
+    for t in range(max_new_tokens):
+        for i in range(B):
+            outs[i].append(int(tok[i, 0]))
+        if t == max_new_tokens - 1:
+            break
+        logits, cache = decode(params, cache, tok, jnp.int32(pos + t))
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    return outs
+
+
+class ServeEngine:
+    """Wave-granularity continuous batching over `serve_batch`."""
+
+    def __init__(self, model, params, batch_size: int, max_seq: int,
+                 extra: dict | None = None):
+        self.model = model
+        self.params = params
+        self.B = batch_size
+        self.max_seq = max_seq
+        self.extra = extra
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def run(self) -> list[Request]:
+        while self.queue:
+            wave = self.queue[:self.B]
+            self.queue = self.queue[self.B:]
+            prompts = [r.prompt for r in wave]
+            while len(prompts) < self.B:          # pad the wave
+                prompts.append(wave[0].prompt)
+            steps = max(r.max_new_tokens for r in wave)
+            outs = serve_batch(self.model, self.params, prompts, steps,
+                               self.max_seq, self.extra)
+            for r, o in zip(wave, outs):
+                r.out_tokens = o[:r.max_new_tokens]
+                r.done = True
+                self.finished.append(r)
+        return self.finished

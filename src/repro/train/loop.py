@@ -1,0 +1,112 @@
+"""Fault-tolerant training loop: checkpoint/restart, retry, straggler hooks.
+
+``train`` resumes from the newest valid checkpoint, saves every
+``ckpt_every`` steps, retries transient step failures with backoff (the
+single-host stand-in for preemption/ICI-flap recovery), and logs per-step
+wall time with a deadline-based straggler monitor (at fleet scale the monitor
+feeds the scheduler; here it logs).  Elasticity: the checkpoint layout is
+mesh-independent (see train/checkpoint.py), so a restart may use a different
+device count.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.data import pipeline as dpipe
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt_mod
+from repro.train import trainstep
+
+
+@dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    max_retries: int = 3
+    retry_backoff_s: float = 1.0
+    straggler_deadline_factor: float = 3.0
+    log_every: int = 10
+
+
+@dataclass
+class LoopState:
+    step: int = 0
+    losses: list = field(default_factory=list)
+    step_times: list = field(default_factory=list)
+    restarts: int = 0
+    straggler_events: int = 0
+
+
+def train(model, shape, mesh, opt_cfg=None, loop_cfg: LoopConfig | None = None,
+          data_seed: int = 0, fail_injector=None) -> LoopState:
+    """Run (or resume) training; returns the loop state."""
+    loop_cfg = loop_cfg or LoopConfig()
+    cfg = model.cfg
+    opt_cfg = opt_cfg or opt_mod.OptConfig(total_steps=loop_cfg.total_steps)
+    step_fn, in_sh, out_sh, donate = trainstep.build_train_step(
+        model, shape, mesh, opt_cfg=opt_cfg)
+    jitted = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=donate)
+
+    dcfg = dpipe.DataConfig(cfg.vocab_size, shape.seq_len, shape.global_batch,
+                            seed=data_seed)
+    state = LoopState()
+
+    # ---- init or resume -----------------------------------------------------
+    last = ckpt.latest_step(loop_cfg.ckpt_dir)
+    params = model.init(jax.random.key(0))
+    opt_state = opt_mod.init(params)
+    if last is not None:
+        sh = ({"params": in_sh[0], "opt": in_sh[1]} if in_sh is not None else None)
+        params, opt_state, manifest = ckpt.restore(
+            loop_cfg.ckpt_dir, last, params, opt_state, shardings=sh)
+        state.step = manifest["step"]
+        state.restarts += 1
+    if mesh is not None and in_sh is not None:
+        params = jax.device_put(params, in_sh[0])
+        opt_state = jax.device_put(opt_state, in_sh[1])
+
+    median_t = None
+    while state.step < loop_cfg.total_steps:
+        step = state.step
+        batch = dpipe.batch_at(dcfg, step)
+        batch.update(dpipe.extra_inputs(cfg, shape.global_batch, data_seed, step))
+        if cfg.family == "vlm":
+            P = cfg.num_patches
+            batch["tokens"] = batch["tokens"][:, :shape.seq_len - P]
+            batch["labels"] = batch["labels"][:, :shape.seq_len - P]
+
+        for attempt in range(loop_cfg.max_retries + 1):
+            try:
+                if fail_injector is not None:
+                    fail_injector(step, attempt)
+                t0 = time.time()
+                params, opt_state, metrics = jitted(params, opt_state, batch)
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                break
+            except (RuntimeError, jax.errors.JaxRuntimeError):
+                if attempt >= loop_cfg.max_retries:
+                    raise
+                time.sleep(loop_cfg.retry_backoff_s * (2 ** attempt))
+                state.restarts += 1
+
+        state.losses.append(loss)
+        state.step_times.append(dt)
+        if median_t and dt > loop_cfg.straggler_deadline_factor * median_t:
+            state.straggler_events += 1  # fleet: report host to the scheduler
+        if len(state.step_times) >= 5:
+            median_t = float(np.median(state.step_times[-20:]))
+        state.step += 1
+        if state.step % loop_cfg.log_every == 0:
+            print(f"step {state.step}: loss={loss:.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms")
+        if state.step % loop_cfg.ckpt_every == 0 or state.step == loop_cfg.total_steps:
+            ckpt.save(loop_cfg.ckpt_dir, state.step, params, opt_state,
+                      extra={"loss": loss})
+    return state

@@ -1,0 +1,49 @@
+"""Regression: the count models reproduce the paper's Tables 3-9 and VAO claims."""
+import pytest
+
+from repro.core import characterize as ch
+
+DENSE_TOL = 0.011   # <=1.1% on every published cell
+CANNEAL_TOL = 0.08  # fitted empirical multipliers; worst cell 7%
+
+
+@pytest.mark.parametrize("app", list(ch.PAPER_TABLES))
+def test_tables_match_paper(app):
+    tol = CANNEAL_TOL if app == "canneal" else DENSE_TOL
+    for row in ch.compare_to_paper(app):
+        for k, v in row.items():
+            if k.startswith("err"):
+                assert v <= tol, (app, row["mvl"], k, v)
+
+
+@pytest.mark.parametrize("app,vao", list(ch.PAPER_VAO.items()))
+def test_vao_speedups(app, vao):
+    got = ch.characterize(app, 8).vao_speedup
+    assert abs(got - vao) <= 0.04, (app, got, vao)
+
+
+def test_blackscholes_pct_vectorization():
+    # paper Table 3: 80% / 86% / 87%
+    for mvl, pct in [(8, 0.80), (64, 0.86), (256, 0.87)]:
+        got = ch.characterize("blackscholes", mvl).pct_vectorization
+        assert abs(got - pct) < 0.015, (mvl, got)
+
+
+def test_swaptions_pct_vectorization():
+    # paper Table 9: 81% / 96% / 98%
+    for mvl, pct in [(8, 0.81), (64, 0.96), (256, 0.98)]:
+        got = ch.characterize("swaptions", mvl).pct_vectorization
+        assert abs(got - pct) < 0.015, (mvl, got)
+
+
+def test_canneal_avg_vl():
+    # paper Table 4: average VL 22.25 @64, 65.41 @256
+    assert abs(ch.characterize("canneal", 64).avg_vl - 22.25) < 0.7
+    assert abs(ch.characterize("canneal", 256).avg_vl - 65.41) < 2.0
+
+
+def test_pct_vectorization_increases_with_mvl():
+    for app in ch.PAPER_TABLES:
+        a = ch.characterize(app, 8).pct_vectorization
+        b = ch.characterize(app, 256).pct_vectorization
+        assert b >= a, app

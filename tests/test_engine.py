@@ -1,0 +1,119 @@
+"""Property tests on the vector-engine timing model (hypothesis)."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine as eng
+from repro.core import isa, tracegen
+
+
+def _body(mvl=64):
+    return tracegen.APPS["blackscholes"].body(mvl, None).tile(3)
+
+
+def _time(cfg, body=None):
+    return eng.simulate(body if body is not None else _body(cfg.mvl), cfg)["time"]
+
+
+cfg_st = st.builds(
+    eng.VectorEngineConfig,
+    mvl=st.sampled_from([8, 16, 64, 256]),
+    lanes=st.sampled_from([1, 2, 4, 8]),
+    phys_regs=st.sampled_from([34, 40, 64]),
+    queue_entries=st.sampled_from([4, 16]),
+    ooo_issue=st.booleans(),
+    vrf_read_ports=st.sampled_from([1, 3]),
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(cfg_st)
+def test_positive_and_deterministic(cfg):
+    t1, t2 = _time(cfg), _time(cfg)
+    assert t1 > 0 and t1 == t2
+
+
+@settings(max_examples=15, deadline=None)
+@given(cfg_st)
+def test_more_lanes_never_slower(cfg):
+    if cfg.lanes >= 8:
+        return
+    t1 = _time(cfg)
+    t2 = _time(dataclasses.replace(cfg, lanes=cfg.lanes * 2))
+    assert t2 <= t1 * 1.001, (t1, t2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(cfg_st)
+def test_ooo_not_slower_than_inorder(cfg):
+    a = _time(dataclasses.replace(cfg, ooo_issue=False))
+    b = _time(dataclasses.replace(cfg, ooo_issue=True))
+    assert b <= a * 1.001
+
+
+@settings(max_examples=15, deadline=None)
+@given(cfg_st)
+def test_more_read_ports_never_slower(cfg):
+    if cfg.vrf_read_ports != 1:
+        return
+    a = _time(cfg)
+    b = _time(dataclasses.replace(cfg, vrf_read_ports=3))
+    assert b <= a * 1.001
+
+
+@settings(max_examples=10, deadline=None)
+@given(cfg_st)
+def test_bigger_queues_never_slower(cfg):
+    if cfg.queue_entries != 4:
+        return
+    a = _time(cfg)
+    b = _time(dataclasses.replace(cfg, queue_entries=16))
+    assert b <= a * 1.001
+
+
+def test_startup_time_effect():
+    """Paper §5.1: start-up time hurts small MVL relatively more."""
+    body8 = tracegen.APPS["blackscholes"].body(8, None)
+    body256 = tracegen.APPS["blackscholes"].body(256, None)
+    cfg1 = eng.VectorEngineConfig(mvl=8, lanes=1, vrf_read_ports=1)
+    cfg3 = eng.VectorEngineConfig(mvl=8, lanes=1, vrf_read_ports=3)
+    rel8 = eng.steady_state_time(body8, cfg1) / eng.steady_state_time(body8, cfg3)
+    cfg1b = dataclasses.replace(cfg1, mvl=256)
+    cfg3b = dataclasses.replace(cfg3, mvl=256)
+    rel256 = eng.steady_state_time(body256, cfg1b) / eng.steady_state_time(body256, cfg3b)
+    assert rel8 > rel256  # extra read ports matter more at short VL
+
+
+def test_crossbar_reductions_not_slower_than_ring():
+    recs = []
+    for i in range(16):
+        recs.append(isa.vreduce(256, src1=i % 8, dst=20))
+    tr = isa.Trace.from_records(recs)
+    ring = eng.VectorEngineConfig(mvl=256, lanes=8, interconnect="ring")
+    xbar = eng.VectorEngineConfig(mvl=256, lanes=8, interconnect="crossbar")
+    assert eng.simulate(tr, xbar)["time"] <= eng.simulate(tr, ring)["time"]
+
+
+def test_vmu_serializes_memory():
+    """Two loads cannot overlap in the VMU (paper §3.2.5)."""
+    one = isa.Trace.from_records([isa.vload(256, dst=0)])
+    two = isa.Trace.from_records([isa.vload(256, dst=0), isa.vload(256, dst=1)])
+    cfg = eng.VectorEngineConfig(mvl=256, lanes=8)
+    t1 = eng.simulate(one, cfg)["time"]
+    t2 = eng.simulate(two, cfg)["time"]
+    assert t2 >= t1 * 1.6
+
+
+def test_dep_scalar_stalls():
+    base = [isa.varith(64, src1=0, src2=1, dst=2),
+            isa.vmask_scalar(64, src1=2),
+            isa.scalar_block(100)]
+    dep = [isa.varith(64, src1=0, src2=1, dst=2),
+           isa.vmask_scalar(64, src1=2),
+           isa.scalar_block(100, dep_scalar=True)]
+    cfg = eng.VectorEngineConfig(mvl=64, lanes=1)
+    t_base = eng.simulate(isa.Trace.from_records(base * 8), cfg)["time"]
+    t_dep = eng.simulate(isa.Trace.from_records(dep * 8), cfg)["time"]
+    assert t_dep >= t_base

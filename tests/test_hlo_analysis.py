@@ -1,0 +1,76 @@
+"""HLO-text analyzer unit tests on synthetic modules."""
+from repro.core import hlo_analysis as H
+
+SYNTH = """\
+HloModule test
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %ar = f32[8,8]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%sum
+  %d = f32[8,8]{1,0} dot(%ar, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%i2, %d)
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+  %x = f32[8,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%zero, %x)
+  %w = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_trip_count_applied():
+    a = H.analyze(SYNTH)
+    # dot: 2*8*8*8 = 1024 flops, x12 trips
+    assert abs(a["flops"] - 12 * (1024 + 64)) <= 12 * 80, a["flops"]
+    # all-reduce: 2 * 256B * (3/4) = 384B per trip
+    assert abs(a["ici_bytes"] - 12 * 384) < 1, a["ici_bytes"]
+    assert a["static_collective_count"] == 1
+
+
+def test_tuple_shapes_with_index_comments():
+    txt = SYNTH.replace(
+        "(s32[], f32[8,8]) while", "(s32[], /*index=1*/f32[8,8]) while")
+    a = H.analyze(txt)
+    assert a["ici_bytes"] > 0  # while still parsed despite '=' in comment
+
+
+def test_group_size_iota_format():
+    txt = SYNTH.replace("replica_groups={{0,1,2,3}}", "replica_groups=[2,2]<=[4]")
+    a = H.analyze(txt)
+    # group size 2 -> 2*256*(1/2) = 256B per trip
+    assert abs(a["ici_bytes"] - 12 * 256) < 1, a["ici_bytes"]
+
+
+def test_slicing_ops_count_window_not_operand():
+    txt = """\
+HloModule t
+
+ENTRY %main (x: f32[1024,64], i: s32[]) -> f32[1,64] {
+  %x = f32[1024,64]{1,0} parameter(0)
+  %i = s32[] parameter(1)
+  %z = s32[] constant(0)
+  ROOT %ds = f32[1,64]{1,0} dynamic-slice(%x, %i, %z), dynamic_slice_sizes={1,64}
+}
+"""
+    a = H.analyze(txt)
+    assert a["hbm_bytes"] == 2 * 64 * 4  # slice read + write, not 1024x64

@@ -1,0 +1,31 @@
+"""Serving engine behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build
+from repro.serve.engine import Request, ServeEngine, serve_batch
+
+
+def test_serve_batch_greedy():
+    cfg = get_config("llama3-8b").smoke()
+    model = build(cfg)
+    params = model.init(jax.random.key(0))
+    prompts = [np.arange(5, dtype=np.int32), np.arange(3, 8, dtype=np.int32)]
+    outs = serve_batch(model, params, prompts, max_new_tokens=4, max_seq=16)
+    assert len(outs) == 2 and all(len(o) == 4 for o in outs)
+    assert all(0 <= t < cfg.padded_vocab for o in outs for t in o)
+
+
+def test_engine_continuous_batching():
+    cfg = get_config("qwen2.5-3b").smoke()
+    model = build(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServeEngine(model, params, batch_size=2, max_seq=16)
+    for i in range(5):
+        eng.submit(Request(uid=i, prompt=np.arange(4, dtype=np.int32) + i,
+                           max_new_tokens=3))
+    done = eng.run()
+    assert len(done) == 5
+    assert all(r.done and len(r.out_tokens) == 3 for r in done)

@@ -1,0 +1,77 @@
+"""Timing-model regression vs the paper's §5 speedup anchors (calibrated)."""
+import pytest
+
+from repro.core import engine as eng
+from repro.core import suite
+
+# (app, mvl, lanes, paper value, tolerance-in-log-space)
+EXACT = [
+    ("blackscholes", 8, 1, 2.22),
+    ("jacobi-2d", 8, 1, 1.79),
+    ("jacobi-2d", 256, 1, 2.99),
+    ("canneal", 16, 1, 1.64),
+    ("canneal", 16, 8, 1.88),
+    ("pathfinder", 8, 1, 1.8),
+    ("streamcluster", 8, 1, 1.68),
+    ("swaptions", 8, 1, 1.03),
+]
+
+
+@pytest.mark.parametrize("app,mvl,lanes,target", EXACT)
+def test_anchor_speedups(app, mvl, lanes, target):
+    got = suite.speedup(app, eng.VectorEngineConfig(mvl=mvl, lanes=lanes))
+    assert 0.80 <= got / target <= 1.25, (app, got, target)
+
+
+def test_canneal_degrades_at_large_mvl():
+    """Paper §5.2: MVL>=128 is slower than scalar for canneal."""
+    for mvl in (128, 256):
+        got = suite.speedup("canneal", eng.VectorEngineConfig(mvl=mvl, lanes=1))
+        assert got < 1.0, (mvl, got)
+
+
+def test_canneal_best_at_short_mvl():
+    s = {m: suite.speedup("canneal", eng.VectorEngineConfig(mvl=m, lanes=1))
+         for m in (8, 16, 64, 256)}
+    assert max(s, key=s.get) in (8, 16)
+    assert s[16] > s[256]
+
+
+def test_particlefilter_never_beats_scalar():
+    """Paper §5.4: no PF configuration beats the scalar core."""
+    for mvl in (8, 64, 256):
+        for lanes in (1, 8):
+            got = suite.speedup(
+                "particlefilter", eng.VectorEngineConfig(mvl=mvl, lanes=lanes))
+            assert got <= 1.0, (mvl, lanes, got)
+
+
+def test_lane_scaling_regimes():
+    """Paper §5.1/5.3: lanes help large-MVL configs much more than short-MVL."""
+    for app in ("blackscholes", "jacobi-2d"):
+        s8_1 = suite.speedup(app, eng.VectorEngineConfig(mvl=8, lanes=1))
+        s8_8 = suite.speedup(app, eng.VectorEngineConfig(mvl=8, lanes=8))
+        s256_1 = suite.speedup(app, eng.VectorEngineConfig(mvl=256, lanes=1))
+        s256_8 = suite.speedup(app, eng.VectorEngineConfig(mvl=256, lanes=8))
+        assert (s256_8 / s256_1) > (s8_8 / s8_1), app
+        assert s256_8 / s256_1 > 2.0, app       # near-linear at large MVL
+
+
+def test_swaptions_llc_study():
+    """Paper §5.7 / Fig 10: with a 256 KB L2 the speedup degrades at large
+    MVL; a 1 MB L2 keeps improving through MVL=256."""
+    small = {m: suite.speedup("swaptions",
+                              eng.VectorEngineConfig(mvl=m, lanes=8, l2_kb=256))
+             for m in (64, 128, 256)}
+    big = {m: suite.speedup("swaptions",
+                            eng.VectorEngineConfig(mvl=m, lanes=8, l2_kb=1024))
+           for m in (64, 128, 256)}
+    assert big[256] > small[256]
+    assert big[256] >= big[64]
+
+
+def test_streamcluster_memory_bound():
+    """Paper §5.6: lane scaling is weak (memory bound)."""
+    s1 = suite.speedup("streamcluster", eng.VectorEngineConfig(mvl=64, lanes=1))
+    s8 = suite.speedup("streamcluster", eng.VectorEngineConfig(mvl=64, lanes=8))
+    assert s8 / s1 < 2.5

@@ -26,25 +26,35 @@ EXPECT = {
 }
 
 
-def shares(app_name: str, mvl=64) -> dict:
-    body = tracegen.APPS[app_name].body(mvl, None)
-    n_vec = np.sum(body.kind != isa.SCALAR_BLOCK)
-    manip = np.isin(body.kind, (isa.VSLIDE, isa.VREDUCE)).sum()
-    indexed = ((body.kind == isa.VLOAD) & (body.mem_pattern == isa.MEM_INDEXED)).sum()
-    dep = body.dep_scalar.sum()
+def shares_all(app_names, mvl=64) -> dict:
+    """Static trace shares + simulated busy fractions for many apps at once:
+    the timing simulations run as one ``simulate_batch`` dispatch set."""
     cfg = eng.VectorEngineConfig(mvl=mvl, lanes=4)
-    sim = eng.simulate(body.tile(16), cfg)
-    return {
-        "manip_share": manip / max(n_vec, 1),
-        "indexed_share": indexed / max(n_vec, 1),
-        "dep_scalar_per_body": float(dep),
-        "vmu_busy_frac": sim["vmu_busy"] / sim["time"],
-        "lane_busy_frac": sim["lane_busy"] / sim["time"],
-    }
+    bodies = [tracegen.APPS[a].body(mvl, None) for a in app_names]
+    sims = eng.simulate_batch([b.tile(16) for b in bodies], [cfg])
+    rows = {}
+    for app_name, body, sim in zip(app_names, bodies, sims):
+        n_vec = np.sum(body.kind != isa.SCALAR_BLOCK)
+        manip = np.isin(body.kind, (isa.VSLIDE, isa.VREDUCE)).sum()
+        indexed = ((body.kind == isa.VLOAD)
+                   & (body.mem_pattern == isa.MEM_INDEXED)).sum()
+        dep = body.dep_scalar.sum()
+        rows[app_name] = {
+            "manip_share": manip / max(n_vec, 1),
+            "indexed_share": indexed / max(n_vec, 1),
+            "dep_scalar_per_body": float(dep),
+            "vmu_busy_frac": sim["vmu_busy"] / sim["time"],
+            "lane_busy_frac": sim["lane_busy"] / sim["time"],
+        }
+    return rows
+
+
+def shares(app_name: str, mvl=64) -> dict:
+    return shares_all([app_name], mvl)[app_name]
 
 
 def main() -> None:
-    rows = {a: shares(a) for a in tracegen.APPS}
+    rows = shares_all(list(tracegen.APPS))
     print(f"{'app':16s} {'manip%':>7s} {'indexed%':>9s} {'dep/body':>9s} "
           f"{'vmu busy':>9s} {'lane busy':>10s}")
     for a, r in rows.items():

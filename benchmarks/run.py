@@ -40,25 +40,59 @@ def table_3_to_9_characterization():
 
 
 def figures_4_to_10_scalability():
+    """Figures 4-10 grid, one batched dispatch set instead of per-point sims."""
     from repro.core import engine as eng
     from repro.core import suite
+    apps = ("blackscholes", "canneal", "jacobi-2d", "particlefilter",
+            "pathfinder", "streamcluster", "swaptions")
+    pairs = [(app, eng.VectorEngineConfig(mvl=mvl, lanes=lanes))
+             for app in apps for mvl in (8, 64, 256) for lanes in (1, 8)]
+    # Fig 10: swaptions LLC study rides in the same batch
+    pairs += [("swaptions", eng.VectorEngineConfig(mvl=256, lanes=8, l2_kb=l2))
+              for l2 in (256, 1024)]
+    t0 = time.perf_counter()
+    speedups = suite.speedup_batch(pairs)
+    us_each = (time.perf_counter() - t0) * 1e6 / len(pairs)
     rows = []
-    for app in ("blackscholes", "canneal", "jacobi-2d", "particlefilter",
-                "pathfinder", "streamcluster", "swaptions"):
-        for mvl in (8, 64, 256):
-            for lanes in (1, 8):
-                cfg = eng.VectorEngineConfig(mvl=mvl, lanes=lanes)
-                t0 = time.perf_counter()
-                s = suite.speedup(app, cfg)
-                us = (time.perf_counter() - t0) * 1e6
-                rows.append((f"fig_scalability_{app}_mvl{mvl}_l{lanes}", us,
-                             f"speedup={s:.2f}"))
-    # Fig 10: swaptions LLC study
-    for l2 in (256, 1024):
-        cfg = eng.VectorEngineConfig(mvl=256, lanes=8, l2_kb=l2)
-        s = suite.speedup("swaptions", cfg)
-        rows.append((f"fig10_swaptions_l2_{l2}kb", 0.0, f"speedup={s:.2f}"))
+    for (app, cfg), s in zip(pairs[:-2], speedups[:-2]):
+        rows.append((f"fig_scalability_{app}_mvl{cfg.mvl}_l{cfg.lanes}",
+                     us_each, f"speedup={s:.2f}"))
+    for (app, cfg), s in zip(pairs[-2:], speedups[-2:]):
+        rows.append((f"fig10_swaptions_l2_{cfg.l2_kb}kb", us_each,
+                     f"speedup={s:.2f}"))
     return rows
+
+
+def sweep_wallclock(quick: bool = False):
+    """The acceptance benchmark: full 24-config x 7-app paper sweep, batched
+    engine vs the sequential per-(app, config) seed path."""
+    from repro.core import engine as eng
+    from repro.core import suite
+    from repro.core import tracegen
+    if quick:
+        apps, mvls, lanes = ["blackscholes", "jacobi-2d"], (8, 64), (1, 8)
+    else:
+        apps, mvls, lanes = sorted(tracegen.APPS), (8, 16, 32, 64, 128, 256), (1, 2, 4, 8)
+    n = len(apps) * len(mvls) * len(lanes)
+    t0 = time.perf_counter()
+    batched = suite.sweep_all(apps, mvls=mvls, lanes=lanes)
+    t_batched = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    seq = {a: {(m, l): suite.speedup(a, eng.VectorEngineConfig(mvl=m, lanes=l))
+               for m in mvls for l in lanes} for a in apps}
+    t_seq = time.perf_counter() - t0
+    worst = max(abs(batched[a][k] - seq[a][k]) / seq[a][k]
+                for a in apps for k in seq[a])
+    label = "quick" if quick else "full"
+    return [
+        (f"sweep_{label}_{n}cfg_batched", t_batched * 1e6,
+         f"wall_s={t_batched:.2f}"),
+        (f"sweep_{label}_{n}cfg_sequential", t_seq * 1e6,
+         f"wall_s={t_seq:.2f}"),
+        (f"sweep_{label}_batched_speedup", 0.0,
+         f"{t_seq / t_batched:.1f}x|max_rel_diff={worst:.2e}"
+         f"|jit_cache={eng.jit_cache_size()}"),
+    ]
 
 
 def kernel_microbench():
@@ -129,10 +163,23 @@ def roofline_table():
     return out
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke mode: characterization + batched figures + a "
+                         "small batched-vs-sequential sweep; skips kernel "
+                         "microbenchmarks and the roofline table")
+    args = ap.parse_args(argv)
+    if args.quick:
+        fns = (table_3_to_9_characterization, figures_4_to_10_scalability,
+               lambda: sweep_wallclock(quick=True))
+    else:
+        fns = (table_3_to_9_characterization, figures_4_to_10_scalability,
+               kernel_microbench, roofline_table,
+               lambda: sweep_wallclock(quick=False))
     print("name,us_per_call,derived")
-    for fn in (table_3_to_9_characterization, figures_4_to_10_scalability,
-               kernel_microbench, roofline_table):
+    for fn in fns:
         for name, us, derived in fn():
             print(f"{name},{us:.1f},{derived}")
 

@@ -12,7 +12,8 @@ from repro.core import suite, tracegen
 from repro.core.characterize import characterize
 
 
-def study(app: str):
+def study(app: str, grid: dict):
+    """Print one app's 24-config table from a batched ``sweep_all`` result."""
     print(f"\n=== {app} ({tracegen.APPS[app].notes}) ===")
     c = characterize(app, 8)
     print(f"VAO speedup {c.vao_speedup:.2f}; "
@@ -21,17 +22,18 @@ def study(app: str):
     lanes = (1, 2, 4, 8)
     print("speedup over scalar     " + "".join(f"  L={l}  " for l in lanes))
     for m in mvls:
-        row = [suite.speedup(app, eng.VectorEngineConfig(mvl=m, lanes=l))
-               for l in lanes]
-        print(f"  MVL={m:4d}            " + "".join(f"{s:6.2f}" for s in row))
+        print(f"  MVL={m:4d}            "
+              + "".join(f"{grid[(m, l)]:6.2f}" for l in lanes))
 
 
 def llc_study():
     print("\n=== swaptions LLC study (paper Fig 10) ===")
-    for l2 in (256, 1024):
-        row = [suite.speedup("swaptions",
-                             eng.VectorEngineConfig(mvl=m, lanes=8, l2_kb=l2))
-               for m in (8, 64, 128, 256)]
+    mvls = (8, 64, 128, 256)
+    pairs = [("swaptions", eng.VectorEngineConfig(mvl=m, lanes=8, l2_kb=l2))
+             for l2 in (256, 1024) for m in mvls]
+    vals = suite.speedup_batch(pairs)
+    for i, l2 in enumerate((256, 1024)):
+        row = vals[i * len(mvls):(i + 1) * len(mvls)]
         print(f"  L2={l2:5d}KB  " + "".join(f"{s:6.2f}" for s in row))
 
 
@@ -40,8 +42,9 @@ def main():
     ap.add_argument("--app", default=None)
     args = ap.parse_args()
     apps = [args.app] if args.app else list(tracegen.APPS)
+    table = suite.sweep_all(apps)  # every app x 24 configs, batched
     for app in apps:
-        study(app)
+        study(app, table[app])
     llc_study()
 
 

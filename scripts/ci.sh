@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# One-command regression gate: tier-1 tests + the quick benchmark smoke.
+#   scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== quick benchmark smoke =="
+python benchmarks/run.py --quick

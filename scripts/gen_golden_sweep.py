@@ -1,0 +1,31 @@
+"""Regenerate tests/golden_sweep.json (the 24-config x 7-app speedup table).
+
+Run after an *intentional* recalibration of the timing model, then review the
+diff — tests/test_golden_sweep.py pins every cell so silent drift fails CI.
+
+    PYTHONPATH=src python scripts/gen_golden_sweep.py
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core import suite
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "tests",
+                   "golden_sweep.json")
+
+
+def main() -> None:
+    table = suite.sweep_all()
+    payload = {app: {f"{m}x{l}": round(s, 6) for (m, l), s in grid.items()}
+               for app, grid in table.items()}
+    with open(OUT, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(OUT)}: "
+          f"{sum(len(g) for g in payload.values())} cells")
+
+
+if __name__ == "__main__":
+    main()

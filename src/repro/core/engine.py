@@ -17,11 +17,17 @@ first-order effects:
 
 Times are in vector-engine cycles (1 GHz -> 1 cycle = 1 ns); the scalar core
 runs at 2 GHz dual-issue with latency-class costs.
+
+All config knobs — including issue policy and interconnect topology — are
+traced values, so one compiled scan serves every configuration and the whole
+model vmaps over a config axis: ``simulate_batch`` runs a multi-config sweep
+(e.g. the paper's 24-point Table 10 grid x 7 apps) as a handful of XLA
+dispatches, with traces NOP-padded to power-of-two length buckets so repeat
+sweeps hit the jit cache.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -80,11 +86,20 @@ def _ring_write(ring, count, value):
     return ring.at[jnp.mod(count, MAX_RING)].set(value)
 
 
-@functools.partial(jax.jit, static_argnames=("ooo", "ring_ic"))
-def _simulate(xs, params, ooo: bool, ring_ic: bool):
+def _make_step(params):
+    """Build the per-instruction scan step for one parameter vector.
+
+    Everything configuration-dependent — including the formerly-static
+    ``ooo``/``ring`` flags — is a traced value, so a single compiled
+    executable serves every config and the step vmaps cleanly over a batch
+    axis (``simulate_batch``).
+    """
     (lanes, phys_extra, rob_entries, q_entries, read_ports, line_elems,
      mem_ports, lat_l1, lat_l2, lat_dram, scalar_scale, dispatch_lat,
-     sc_cost, pipe_depth, elem_cost) = params
+     ooo_f, ring_f) = params
+    sc_cost = jnp.asarray(SCALAR_CYCLES)
+    pipe_depth = jnp.asarray(VEC_PIPE_DEPTH)
+    elem_cost = jnp.asarray(VEC_ELEM_CYCLES)
 
     def step(carry, x):
         (reg_ready, rob_ring, n_rob, phys_ring, n_phys, aq_ring, n_aq,
@@ -93,7 +108,9 @@ def _simulate(xs, params, ooo: bool, ring_ic: bool):
         kind, vl, fu, n_src, src1, src2, dst, mpat, m1, m2, s_count, dep = x
 
         vlf = vl.astype(jnp.float32)
-        is_scalar = kind == isa.SCALAR_BLOCK
+        # NOP padding rides the scalar path with s_count=0 / dep=False: it
+        # advances no clock and writes no resource (padding invariance).
+        is_scalar = (kind == isa.SCALAR_BLOCK) | (kind == isa.NOP)
 
         # ---- scalar block ---------------------------------------------------
         t_wait = jnp.where(dep, jnp.maximum(t_scalar, scalar_res), t_scalar)
@@ -119,8 +136,7 @@ def _simulate(xs, params, ooo: bool, ring_ic: bool):
         fu_free = jnp.where(is_mem, vmu_free, lane_free)
         inorder = jnp.where(is_mem, last_mq, last_aq)
         issue = jnp.maximum(jnp.maximum(dispatch, ops_ready), fu_free)
-        if not ooo:
-            issue = jnp.maximum(issue, inorder)
+        issue = jnp.where(ooo_f > 0, issue, jnp.maximum(issue, inorder))
 
         # start-up: pipe depth + VRF read-port serialization (§3.2.4)
         startup = pipe_depth[fu] + jnp.ceil(
@@ -130,7 +146,8 @@ def _simulate(xs, params, ooo: bool, ring_ic: bool):
         exec_arith = per_lane * elem_cost[fu]
         # slides move each element one lane over: one extra hop either topology
         exec_slide = per_lane + 1.0
-        hops = (lanes - 1.0) if ring_ic else jnp.ceil(jnp.log2(jnp.maximum(lanes, 2.0)))
+        hops = jnp.where(ring_f > 0, lanes - 1.0,
+                         jnp.ceil(jnp.log2(jnp.maximum(lanes, 2.0))))
         exec_reduce = per_lane + hops + pipe_depth[fu]
         exec_move = per_lane
         exec_mask = per_lane + hops  # vfirst/vpopc reduce a mask to a scalar
@@ -187,16 +204,22 @@ def _simulate(xs, params, ooo: bool, ring_ic: bool):
             busy_lane + jnp.where(is_scalar | is_mem, 0.0, startup + exec_c),
             busy_vmu + jnp.where(is_mem, startup + exec_c, 0.0),
         )
-        return carry_n, commit
+        return carry_n, None
 
+    return step
+
+
+def _init_carry():
     zero = jnp.float32(0.0)
     izero = jnp.int32(0)
-    carry0 = (jnp.zeros(32, jnp.float32), jnp.zeros(MAX_RING, jnp.float32), izero,
-              jnp.zeros(MAX_RING, jnp.float32), izero,
-              jnp.zeros(MAX_RING, jnp.float32), izero,
-              jnp.zeros(MAX_RING, jnp.float32), izero,
-              zero, zero, zero, zero, zero, zero, zero, zero, zero)
-    carry, commits = jax.lax.scan(step, carry0, xs)
+    return (jnp.zeros(32, jnp.float32), jnp.zeros(MAX_RING, jnp.float32), izero,
+            jnp.zeros(MAX_RING, jnp.float32), izero,
+            jnp.zeros(MAX_RING, jnp.float32), izero,
+            jnp.zeros(MAX_RING, jnp.float32), izero,
+            zero, zero, zero, zero, zero, zero, zero, zero, zero)
+
+
+def _metrics(carry) -> dict:
     t_scalar, last_commit = carry[9], carry[14]
     return {
         "time": jnp.maximum(t_scalar, last_commit),
@@ -207,30 +230,159 @@ def _simulate(xs, params, ooo: bool, ring_ic: bool):
     }
 
 
-def simulate(trace: isa.Trace, cfg: VectorEngineConfig) -> dict:
-    """Run the timing model; returns times in vector-engine cycles (=ns)."""
-    xs = (
-        jnp.asarray(trace.kind), jnp.asarray(trace.vl), jnp.asarray(trace.fu),
-        jnp.asarray(trace.n_src), jnp.asarray(trace.src1),
-        jnp.asarray(trace.src2), jnp.asarray(trace.dst),
-        jnp.asarray(trace.mem_pattern), jnp.asarray(trace.miss_l1),
-        jnp.asarray(trace.miss_l2), jnp.asarray(trace.scalar_count),
-        jnp.asarray(trace.dep_scalar),
-    )
+def _scan_core(xs, params):
+    """One trace x one config, full-length scan -> timing dict."""
+    carry, _ = jax.lax.scan(_make_step(params), _init_carry(), xs)
+    return _metrics(carry)
+
+
+def _chunk_core(carry, xs, params):
+    """One fixed-size chunk of the scan, resumable: threading the carry
+    through repeated calls is exactly the full scan, but every trace length
+    reuses the same (batch, CHUNK)-shaped executable instead of compiling
+    per length — the jit-cache memoization that makes repeat sweeps cheap."""
+    carry, _ = jax.lax.scan(_make_step(params), carry, xs)
+    return carry
+
+
+_simulate_jit = jax.jit(_scan_core)
+_chunk_batch_jit = jax.jit(jax.vmap(_chunk_core))
+
+# Batched traces are NOP-padded to multiples of CHUNK and scanned chunk by
+# chunk; the compilation key is (batch bucket, CHUNK) only.
+CHUNK = 1024
+
+_TRACE_FIELDS = ("kind", "vl", "fu", "n_src", "src1", "src2", "dst",
+                 "mem_pattern", "miss_l1", "miss_l2", "scalar_count",
+                 "dep_scalar")
+
+
+def _trace_xs(trace: isa.Trace) -> tuple:
+    return tuple(jnp.asarray(getattr(trace, f)) for f in _TRACE_FIELDS)
+
+
+def _cfg_params_np(cfg: VectorEngineConfig) -> tuple:
+    """Per-config parameter vector (np scalars: stackable for the batch axis)."""
     freq_ratio = cfg.vector_freq_ghz / cfg.scalar_freq_ghz
     scalar_scale = freq_ratio / cfg.scalar_ipc
-    params = (
-        jnp.float32(cfg.lanes), jnp.int32(cfg.phys_regs - 32),
-        jnp.int32(cfg.rob_entries), jnp.int32(cfg.queue_entries),
-        jnp.float32(cfg.vrf_read_ports), jnp.float32(cfg.cache_line_bits / 64),
-        jnp.float32(cfg.mem_ports), jnp.float32(cfg.lat_l1),
-        jnp.float32(cfg.lat_l2), jnp.float32(cfg.lat_dram),
-        jnp.float32(scalar_scale), jnp.float32(cfg.dispatch_latency),
-        jnp.asarray(SCALAR_CYCLES), jnp.asarray(VEC_PIPE_DEPTH),
-        jnp.asarray(VEC_ELEM_CYCLES),
+    return (
+        np.float32(cfg.lanes), np.int32(cfg.phys_regs - 32),
+        np.int32(cfg.rob_entries), np.int32(cfg.queue_entries),
+        np.float32(cfg.vrf_read_ports), np.float32(cfg.cache_line_bits / 64),
+        np.float32(cfg.mem_ports), np.float32(cfg.lat_l1),
+        np.float32(cfg.lat_l2), np.float32(cfg.lat_dram),
+        np.float32(scalar_scale), np.float32(cfg.dispatch_latency),
+        np.float32(1.0 if cfg.ooo_issue else 0.0),
+        np.float32(1.0 if cfg.interconnect == "ring" else 0.0),
     )
-    out = _simulate(xs, params, bool(cfg.ooo_issue), cfg.interconnect == "ring")
+
+
+def simulate(trace: isa.Trace, cfg: VectorEngineConfig) -> dict:
+    """Run the timing model; returns times in vector-engine cycles (=ns)."""
+    params = tuple(jnp.asarray(p) for p in _cfg_params_np(cfg))
+    out = _simulate_jit(_trace_xs(trace), params)
     return {k: float(v) for k, v in out.items()}
+
+
+def _pow2_bucket(n: int, lo: int = 8) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+def _len_bucket(n: int) -> int:
+    """Batched traces are padded up to a multiple of CHUNK (the scan is
+    dispatched chunk by chunk, so length buckets cost padded *run* steps but
+    never a recompile)."""
+    return max(CHUNK, -(-n // CHUNK) * CHUNK)
+
+
+def jit_cache_size() -> int:
+    """Number of engine executables compiled so far (sequential + batched),
+    or -1 when the installed JAX doesn't expose jit cache introspection
+    (``_cache_size`` is a private API).
+
+    The batched path's compilation key is (batch bucket, CHUNK) only: flags
+    are traced, lengths are chunked, batch sizes are padded to powers of two.
+    """
+    try:
+        return int(_simulate_jit._cache_size() + _chunk_batch_jit._cache_size())
+    except AttributeError:
+        return -1
+
+
+def _run_batch_group(traces: list[isa.Trace], cfgs: list[VectorEngineConfig],
+                     length: int, collect_times: bool = False):
+    """Pad to `length` (a CHUNK multiple), pad the batch to a power of two
+    (repeating the first element), then scan chunk by chunk, carrying the
+    engine state between dispatches.
+
+    With ``collect_times`` the running per-lane "time" after every chunk is
+    also returned ([n_chunks, B]) — ``steady_state_time_batch`` uses it to
+    read the warmup checkpoint out of the middle of a single fused scan.
+    """
+    b = len(traces)
+    bb = _pow2_bucket(b)
+    stacked = isa.stack_traces(traces + [traces[0]] * (bb - b), length)
+    xs_np = [getattr(stacked, f) for f in _TRACE_FIELDS]
+    cols = list(zip(*(_cfg_params_np(c) for c in (cfgs + [cfgs[0]] * (bb - b)))))
+    params = tuple(jnp.asarray(np.stack(col)) for col in cols)
+    carry = jax.tree.map(
+        lambda a: jnp.zeros((bb,) + a.shape, a.dtype), _init_carry())
+    times = []
+    for i in range(length // CHUNK):
+        xs = tuple(jnp.asarray(a[:, i * CHUNK:(i + 1) * CHUNK]) for a in xs_np)
+        carry = _chunk_batch_jit(carry, xs, params)
+        if collect_times:
+            times.append(jnp.maximum(carry[9], carry[14]))
+    out = {k: np.asarray(v) for k, v in _metrics(carry).items()}
+    rows = [{k: float(v[i]) for k, v in out.items()} for i in range(b)]
+    if collect_times:
+        return rows, np.stack([np.asarray(t) for t in times])
+    return rows
+
+
+def _broadcast_pairs(traces, cfgs, noun: str = "traces"):
+    """Pair up the two argument lists, broadcasting a length-1 list."""
+    traces = list(traces)
+    cfgs = list(cfgs)
+    if len(traces) == 1 and len(cfgs) > 1:
+        traces = traces * len(cfgs)
+    if len(cfgs) == 1 and len(traces) > 1:
+        cfgs = cfgs * len(traces)
+    if len(traces) != len(cfgs):
+        raise ValueError(f"{len(traces)} {noun} vs {len(cfgs)} configs")
+    return traces, cfgs
+
+
+def _group_by_length_bucket(traces) -> dict[int, list[int]]:
+    groups: dict[int, list[int]] = {}
+    for i, t in enumerate(traces):
+        groups.setdefault(_len_bucket(len(t)), []).append(i)
+    return groups
+
+
+def simulate_batch(traces, cfgs) -> list[dict]:
+    """Batched timing model: N (trace, config) pairs in a handful of
+    XLA dispatches instead of N sequential ``simulate`` calls.
+
+    ``traces`` and ``cfgs`` are lists; a length-1 list broadcasts against the
+    other argument.  Pairs are grouped by bucketed trace length; each group
+    is padded with timing-neutral NOPs, stacked, and run through the vmapped
+    chunk scan.  Results match sequential ``simulate`` (same step arithmetic
+    — the scan core is shared) and arrive in input order.
+    """
+    traces, cfgs = _broadcast_pairs(traces, cfgs)
+    if not traces:
+        return []
+    results: list[dict] = [None] * len(traces)  # type: ignore[list-item]
+    for length, idxs in sorted(_group_by_length_bucket(traces).items()):
+        outs = _run_batch_group([traces[i] for i in idxs],
+                                [cfgs[i] for i in idxs], length)
+        for i, r in zip(idxs, outs):
+            results[i] = r
+    return results
 
 
 def steady_state_time(body: isa.Trace, cfg: VectorEngineConfig,
@@ -239,6 +391,38 @@ def steady_state_time(body: isa.Trace, cfg: VectorEngineConfig,
     t1 = simulate(body.tile(warmup), cfg)["time"]
     t2 = simulate(body.tile(warmup + measure), cfg)["time"]
     return (t2 - t1) / measure
+
+
+def steady_state_time_batch(bodies, cfgs, warmup: int = 8,
+                            measure: int = 24) -> list[float]:
+    """Batched ``steady_state_time``: every (body, config) pair in a handful
+    of chunked dispatches.
+
+    The warmup and measurement runs are fused into one scan per pair: the
+    warmup tiles are NOP-padded to a chunk boundary (timing-neutral, so the
+    carry at the boundary equals the carry after the bare warmup), the
+    warmup time is read from the running per-chunk checkpoint, and the
+    measurement tiles continue in the same scan — bitwise identical to the
+    sequential two-simulation recipe at ~60% of the steps.
+    """
+    bodies, cfgs = _broadcast_pairs(bodies, cfgs, noun="bodies")
+    if not bodies:
+        return []
+    traces, w_chunks = [], []
+    for body in bodies:
+        warm = body.tile(warmup)
+        wlen = _len_bucket(len(warm))
+        traces.append(warm.pad_to(wlen).concat(body.tile(measure)))
+        w_chunks.append(wlen // CHUNK)
+    out: list[float] = [0.0] * len(traces)
+    for length, idxs in sorted(_group_by_length_bucket(traces).items()):
+        rows, times = _run_batch_group(
+            [traces[i] for i in idxs], [cfgs[i] for i in idxs], length,
+            collect_times=True)
+        for lane, i in enumerate(idxs):
+            t1 = float(times[w_chunks[i] - 1, lane])
+            out[i] = (rows[lane]["time"] - t1) / measure
+    return out
 
 
 def scalar_time(trace: isa.Trace, cfg: VectorEngineConfig) -> float:

@@ -22,10 +22,12 @@ VSLIDE = 4         # slide1up/slide1down: lane interconnect, distance 1
 VREDUCE = 5        # reduction via binary operator tree across lanes
 VMASK_SCALAR = 6   # vfirst.m / vpopc.m: writes a scalar register
 VMOVE = 7          # whole-register moves / spill code (VL = MVL)
+NOP = 8            # explicit padding entry: provably timing-neutral
 
 KIND_NAMES = {
     SCALAR_BLOCK: "scalar", VARITH: "arith", VLOAD: "load", VSTORE: "store",
     VSLIDE: "slide", VREDUCE: "reduce", VMASK_SCALAR: "mask2s", VMOVE: "move",
+    NOP: "nop",
 }
 
 # functional-unit classes (latency class of the operation)
@@ -88,6 +90,44 @@ class Trace:
         return Trace(**{k: np.concatenate([getattr(self, k), getattr(other, k)])
                         for k in self.__dataclass_fields__})
 
+    def pad_to(self, n: int) -> "Trace":
+        """Append NOP entries until the trace has exactly n instructions.
+
+        NOPs take the scalar path with scalar_count=0 and dep_scalar=False, so
+        they advance no clock and touch no engine resource: padding the tail
+        of a trace never changes the simulated time (tests/test_batch_engine
+        asserts this bitwise).
+        """
+        if n < len(self):
+            raise ValueError(f"pad_to({n}) on trace of length {len(self)}")
+        if n == len(self):
+            return self
+        return self.concat(nop_trace(n - len(self)))
+
+
+def nop_trace(n: int) -> Trace:
+    """A trace of n timing-neutral padding entries."""
+    i32 = lambda v: np.full(n, v, np.int32)
+    return Trace(
+        kind=i32(NOP), vl=i32(0), fu=i32(FU_SIMPLE), n_src=i32(0),
+        src1=i32(-1), src2=i32(-1), dst=i32(-1), mem_pattern=i32(MEM_UNIT),
+        miss_l1=np.zeros(n, np.float32), miss_l2=np.zeros(n, np.float32),
+        scalar_count=i32(0), dep_scalar=np.zeros(n, bool),
+    )
+
+
+def stack_traces(traces: list["Trace"], length: int | None = None) -> Trace:
+    """Pad every trace to a common length and stack along a new batch axis.
+
+    Returns a Trace whose fields are [B, L] arrays — the layout consumed by
+    ``engine.simulate_batch`` (vmap over axis 0, scan over axis 1).
+    """
+    if length is None:
+        length = max(len(t) for t in traces)
+    padded = [t.pad_to(length) for t in traces]
+    return Trace(**{k: np.stack([getattr(t, k) for t in padded])
+                    for k in Trace.__dataclass_fields__})
+
 
 def scalar_block(count: int, fu: int = FU_SIMPLE, dep_scalar: bool = False) -> dict:
     return dict(kind=SCALAR_BLOCK, scalar_count=int(round(count)), fu=fu,
@@ -122,3 +162,7 @@ def vmask_scalar(vl, src1=0) -> dict:
 
 def vmove(vl, src1=0, dst=1) -> dict:
     return dict(kind=VMOVE, vl=vl, src1=src1, dst=dst, n_src=1)
+
+
+def nop() -> dict:
+    return dict(kind=NOP, n_src=0, src1=-1, src2=-1, dst=-1)

@@ -50,10 +50,9 @@ def scalar_runtime_ns(app_name: str) -> float:
     return float(t) * SCALAR_BASELINE_MULT.get(app_name, 1.0)
 
 
-def vector_runtime_ns(app_name: str, cfg: eng.VectorEngineConfig) -> float:
+def _vector_runtime_from_per_chunk(app_name: str, cfg: eng.VectorEngineConfig,
+                                   body, per_chunk: float) -> float:
     app = tracegen.APPS[app_name]
-    body = app.body(cfg.mvl, cfg)
-    per_chunk = eng.steady_state_time(body, cfg)
     chunks = app.chunks(min(cfg.mvl, app.max_vl))
     counts = app.counts(cfg.mvl)
     # residual scalar work not amortized per chunk (s0-like constant part)
@@ -63,16 +62,43 @@ def vector_runtime_ns(app_name: str, cfg: eng.VectorEngineConfig) -> float:
     return float(chunks * per_chunk + residual * eng.SCALAR_CYCLES[0] * 0.25)
 
 
+def vector_runtime_ns(app_name: str, cfg: eng.VectorEngineConfig) -> float:
+    body = tracegen.body_for(app_name, cfg.mvl, cfg)
+    per_chunk = eng.steady_state_time(body, cfg)
+    return _vector_runtime_from_per_chunk(app_name, cfg, body, per_chunk)
+
+
 def speedup(app_name: str, cfg: eng.VectorEngineConfig) -> float:
     return scalar_runtime_ns(app_name) / vector_runtime_ns(app_name, cfg)
 
 
+def speedup_batch(pairs: list[tuple[str, eng.VectorEngineConfig]]) -> list[float]:
+    """Speedups for N (app, config) pairs via the batched engine: the whole
+    list is two ``simulate_batch`` calls (a handful of XLA dispatches),
+    not 2N sequential simulations."""
+    bodies = [tracegen.body_for(a, c.mvl, c) for a, c in pairs]
+    per_chunk = eng.steady_state_time_batch(bodies, [c for _, c in pairs])
+    scalar = {a: scalar_runtime_ns(a) for a in {a for a, _ in pairs}}
+    return [scalar[a] / _vector_runtime_from_per_chunk(a, c, b, pc)
+            for (a, c), b, pc in zip(pairs, bodies, per_chunk)]
+
+
 def sweep(app_name: str, mvls=(8, 16, 32, 64, 128, 256), lanes=(1, 2, 4, 8),
           **overrides) -> dict:
-    """The paper's 24-configuration sweep (Table 10)."""
-    out = {}
-    for m in mvls:
-        for l in lanes:
-            cfg = eng.VectorEngineConfig(mvl=m, lanes=l, **overrides)
-            out[(m, l)] = speedup(app_name, cfg)
-    return out
+    """The paper's 24-configuration sweep (Table 10), batched."""
+    grid = [(m, l) for m in mvls for l in lanes]
+    pairs = [(app_name, eng.VectorEngineConfig(mvl=m, lanes=l, **overrides))
+             for m, l in grid]
+    return dict(zip(grid, speedup_batch(pairs)))
+
+
+def sweep_all(apps=None, mvls=(8, 16, 32, 64, 128, 256), lanes=(1, 2, 4, 8),
+              **overrides) -> dict:
+    """Full paper study — every app x the 24-config grid — in one batch."""
+    apps = list(apps) if apps is not None else sorted(tracegen.APPS)
+    grid = [(m, l) for m in mvls for l in lanes]
+    pairs = [(a, eng.VectorEngineConfig(mvl=m, lanes=l, **overrides))
+             for a in apps for m, l in grid]
+    flat = speedup_batch(pairs)
+    return {a: dict(zip(grid, flat[i * len(grid):(i + 1) * len(grid)]))
+            for i, a in enumerate(apps)}

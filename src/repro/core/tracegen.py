@@ -468,3 +468,18 @@ APPS = {
     "swaptions": App("swaptions", _sw_counts, _sw_body, _sw_chunks, _SW_MIX,
                      notes="HJM Monte-Carlo; LLC sensitivity; Table 9 / Fig 10"),
 }
+
+
+# With the engine batched, rebuilding ~300-entry traces per config point is a
+# measurable Python-side cost; bodies are pure functions of (mvl, cfg) and
+# VectorEngineConfig is frozen/hashable, so cache on the config itself.
+_BODY_CACHE: dict = {}
+
+
+def body_for(app_name: str, mvl: int, cfg=None) -> Trace:
+    """Cached ``APPS[app_name].body(mvl, cfg)`` (callers must not mutate)."""
+    key = (app_name, mvl, cfg)
+    out = _BODY_CACHE.get(key)
+    if out is None:
+        out = _BODY_CACHE[key] = APPS[app_name].body(mvl, cfg)
+    return out

@@ -9,17 +9,30 @@ from __future__ import annotations
 import jax
 
 
+def _axis_type_kwargs(n_axes: int) -> dict:
+    """``axis_types`` only exists on newer JAX (>= 0.6); older releases
+    default every axis to auto sharding, which is exactly what we request,
+    so the fallback is simply to omit the argument."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_compat_mesh(shape, axes) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with auto axis types on any installed JAX version."""
+    axes = tuple(axes)
+    return jax.make_mesh(tuple(shape), axes, **_axis_type_kwargs(len(axes)))
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_compat_mesh(shape, axes)
 
 
 def make_host_mesh(*, data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     """Small mesh over however many (possibly fake) local devices exist."""
     n = len(jax.devices())
     assert data * model <= n, (data, model, n)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_compat_mesh((data, model), ("data", "model"))

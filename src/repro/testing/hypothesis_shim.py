@@ -1,0 +1,76 @@
+"""Minimal stand-in for ``hypothesis`` so property tests still run (as
+seeded random sampling) when the real library is not installed.
+
+Covers exactly the API surface the test suite uses::
+
+    from repro.testing.hypothesis_shim import given, settings, strategies
+
+``strategies`` provides ``builds``, ``sampled_from``, ``booleans`` and
+``integers``; ``given`` draws ``max_examples`` deterministic examples
+(seeded RNG, so failures reproduce); ``settings`` records ``max_examples``
+and ignores everything else.  Install the real ``hypothesis``
+(requirements-dev.txt) for shrinking and adversarial example search.
+"""
+from __future__ import annotations
+
+import functools
+import random
+import sys
+
+
+class Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng: random.Random):
+        return self._sample(rng)
+
+
+def sampled_from(elements) -> Strategy:
+    elements = list(elements)
+    return Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def booleans() -> Strategy:
+    return sampled_from([False, True])
+
+
+def integers(min_value: int = 0, max_value: int = 2 ** 31 - 1) -> Strategy:
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0) -> Strategy:
+    return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def builds(target, **kwargs) -> Strategy:
+    return Strategy(lambda rng: target(
+        **{k: s.example(rng) for k, s in kwargs.items()}))
+
+
+def settings(max_examples: int = 10, **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies_args):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples",
+                        getattr(fn, "_shim_max_examples", 10))
+            rng = random.Random(12345)
+            for _ in range(n):
+                drawn = [s.example(rng) for s in strategies_args]
+                fn(*args, *drawn, **kwargs)
+        # pytest must see the zero-arg wrapper signature, not the wrapped
+        # test's (strategy-filled) parameters — else it hunts for fixtures.
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+# mirror `from hypothesis import strategies as st`
+strategies = sys.modules[__name__]

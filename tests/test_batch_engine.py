@@ -1,0 +1,119 @@
+"""Batched-vs-sequential equivalence and padding invariance for the engine.
+
+The batched path shares the sequential scan step (flags are traced, padding
+is timing-neutral), so agreement is expected to be bitwise; the asserts allow
+1e-5 relative slack for XLA fusion differences, far inside the 1e-3 the
+reproduction tolerates.
+"""
+import numpy as np
+import pytest
+
+from repro.core import engine as eng
+from repro.core import isa, tracegen
+
+APPS = sorted(tracegen.APPS)
+TABLE10_GRID = [(m, l) for m in (8, 16, 32, 64, 128, 256)
+                for l in (1, 2, 4, 8)]
+
+
+def _close(a, b, tol=1e-5):
+    assert abs(a - b) <= tol * max(abs(b), 1.0), (a, b)
+
+
+def test_batch_matches_sequential_on_table10_grid():
+    """Every Table-10 config x every app: simulate_batch == simulate."""
+    pairs = [(app, eng.VectorEngineConfig(mvl=m, lanes=l))
+             for app in APPS for m, l in TABLE10_GRID]
+    traces = [tracegen.body_for(a, c.mvl, c).tile(2) for a, c in pairs]
+    cfgs = [c for _, c in pairs]
+    batched = eng.simulate_batch(traces, cfgs)
+    for (app, cfg), tr, got in zip(pairs, traces, batched):
+        want = eng.simulate(tr, cfg)
+        for k in want:
+            _close(got[k], want[k])
+
+
+@pytest.mark.parametrize("ooo", [False, True])
+@pytest.mark.parametrize("ic", ["ring", "crossbar"])
+def test_batch_matches_sequential_flag_grid(ooo, ic):
+    """The formerly-static ooo/interconnect flags, now traced selects, still
+    produce sequential-identical results in a mixed batch."""
+    cfgs = [eng.VectorEngineConfig(mvl=m, lanes=l, ooo_issue=ooo,
+                                   interconnect=ic)
+            for m, l in ((8, 1), (64, 4), (256, 8))]
+    body = tracegen.body_for("jacobi-2d", 64, cfgs[0])
+    recs = [isa.vreduce(128, src1=1, dst=2), isa.vslide(128, src1=2, dst=3)]
+    tr = body.concat(isa.Trace.from_records(recs)).tile(3)
+    for got, cfg in zip(eng.simulate_batch([tr], cfgs), cfgs):
+        want = eng.simulate(tr, cfg)
+        for k in want:
+            _close(got[k], want[k])
+
+
+def test_batch_broadcasts_and_preserves_order():
+    cfg = eng.VectorEngineConfig(mvl=64, lanes=2)
+    bodies = [tracegen.body_for(a, 64, cfg).tile(2)
+              for a in ("blackscholes", "pathfinder", "streamcluster")]
+    got = eng.simulate_batch(bodies, [cfg])
+    for tr, row in zip(bodies, got):
+        assert row["time"] == eng.simulate(tr, cfg)["time"]
+
+
+def test_padding_invariance_exact():
+    """Appending NOPs never changes any reported metric, bitwise."""
+    for app, mvl in (("blackscholes", 64), ("canneal", 16),
+                     ("particlefilter", 256)):
+        cfg = eng.VectorEngineConfig(mvl=mvl, lanes=4)
+        tr = tracegen.body_for(app, mvl, cfg).tile(2)
+        base = eng.simulate(tr, cfg)
+        for extra in (1, 17, 256):
+            padded = eng.simulate(tr.pad_to(len(tr) + extra), cfg)
+            assert padded == base, (app, extra)
+
+
+def test_nop_trace_is_timing_neutral_alone():
+    cfg = eng.VectorEngineConfig()
+    out = eng.simulate(isa.nop_trace(64), cfg)
+    assert out["time"] == 0.0 and out["lane_busy"] == 0.0
+
+
+def test_pad_to_validates_and_roundtrips():
+    tr = isa.Trace.from_records([isa.varith(8), isa.nop()])
+    assert len(tr.pad_to(10)) == 10
+    assert tr.pad_to(2) is tr
+    with pytest.raises(ValueError):
+        tr.pad_to(1)
+    stacked = isa.stack_traces([tr, tr.pad_to(5)])
+    assert stacked.kind.shape == (2, 5)
+
+
+def test_steady_state_batch_matches_sequential():
+    """The fused warmup-checkpoint scan equals the two-simulation recipe."""
+    pairs = [("blackscholes", eng.VectorEngineConfig(mvl=64, lanes=4)),
+             ("jacobi-2d", eng.VectorEngineConfig(mvl=256, lanes=8,
+                                                  ooo_issue=True)),
+             ("streamcluster", eng.VectorEngineConfig(mvl=8, lanes=1)),
+             ("canneal", eng.VectorEngineConfig(mvl=16, lanes=2,
+                                                interconnect="crossbar"))]
+    bodies = [tracegen.body_for(a, c.mvl, c) for a, c in pairs]
+    cfgs = [c for _, c in pairs]
+    got = eng.steady_state_time_batch(bodies, cfgs, warmup=4, measure=8)
+    for (app, cfg), body, g in zip(pairs, bodies, got):
+        want = eng.steady_state_time(body, cfg, warmup=4, measure=8)
+        _close(g, want)
+
+
+def test_batch_reuses_compiled_executable():
+    """Compilation is keyed on (batch bucket, CHUNK): new trace lengths and
+    new flag combinations must NOT trigger a recompile."""
+    cfg_a = eng.VectorEngineConfig(mvl=64, lanes=4)
+    tr = tracegen.body_for("pathfinder", 64, cfg_a).tile(2)
+    eng.simulate_batch([tr], [cfg_a, cfg_a])
+    before = eng.jit_cache_size()
+    if before == -1:
+        pytest.skip("installed JAX exposes no jit cache introspection")
+    longer = tr.tile(3)  # different length, same bucket arithmetic shape
+    other = eng.VectorEngineConfig(mvl=128, lanes=8, ooo_issue=True,
+                                   interconnect="crossbar")
+    eng.simulate_batch([longer], [other, other])
+    assert eng.jit_cache_size() == before

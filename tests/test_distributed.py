@@ -28,6 +28,7 @@ def test_moe_shardmap_matches_local():
         from repro.configs import get_config
         from repro.models import moe as M
         from repro.distributed.sharding import use_mesh
+        from repro.launch.mesh import make_compat_mesh
         for arch in ("dbrx-132b", "granite-moe-3b-a800m"):
             cfg = get_config(arch).smoke()
             k = jax.random.key
@@ -37,7 +38,7 @@ def test_moe_shardmap_matches_local():
                  "w2": jax.random.normal(k(3),(cfg.num_experts,cfg.d_ff,cfg.d_model))*0.05}
             h = jax.random.normal(k(4), (4, 8, cfg.d_model))
             ref, _ = M.moe_fwd(p, h, cfg)
-            mesh = jax.make_mesh((2,4),("data","model"),axis_types=(jax.sharding.AxisType.Auto,)*2)
+            mesh = make_compat_mesh((2,4),("data","model"))
             with use_mesh(mesh):
                 out, _ = jax.jit(lambda p,h: M.moe_fwd(p,h,cfg))(p, h)
             np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
@@ -51,6 +52,7 @@ def test_flash_decode_shardmap_matches_local():
         from repro.configs import get_config
         from repro.models import build
         from repro.distributed.sharding import use_mesh
+        from repro.launch.mesh import make_compat_mesh
         cfg = get_config("llama3-8b").smoke().scaled(cache_dtype="float32")
         m = build(cfg)
         params = m.init(jax.random.key(0))
@@ -58,7 +60,7 @@ def test_flash_decode_shardmap_matches_local():
         logits, cache = m.prefill(params, batch, max_seq=32)
         tok = jnp.argmax(logits[:,-1],-1)[:,None].astype(jnp.int32)
         l_ref, c_ref = m.decode_step(params, cache, tok, jnp.int32(16))
-        mesh = jax.make_mesh((2,4),("data","model"),axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_compat_mesh((2,4),("data","model"))
         with use_mesh(mesh):
             l_sm, c_sm = jax.jit(lambda p,c,t: m.decode_step(p,c,t,jnp.int32(16)))(params, cache, tok)
         np.testing.assert_allclose(np.asarray(l_sm), np.asarray(l_ref), rtol=3e-4, atol=3e-4)
@@ -100,7 +102,8 @@ def test_pipeline_parallel_matches_sequential():
     print(_run("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.distributed.pipeline import pipeline_apply
-        mesh = jax.make_mesh((2,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_compat_mesh
+        mesh = make_compat_mesh((2,), ("pod",))
         stages = 2
         def fn_stage(p, x):
             return jnp.tanh(x @ p["w"])

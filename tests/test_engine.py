@@ -3,7 +3,11 @@ import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # hypothesis is optional (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from repro.testing.hypothesis_shim import given, settings, strategies as st
 
 from repro.core import engine as eng
 from repro.core import isa, tracegen

@@ -1,0 +1,30 @@
+"""Golden regression on the full paper sweep (Table 10 grid x 7 apps).
+
+The 8 anchor points in test_suite_timing.py catch gross miscalibration; this
+pins all 168 cells of the batched sweep against a checked-in snapshot so
+*silent* drift — an engine refactor nudging timings, a tracegen constant edit
+— fails loudly.  After an intentional recalibration, regenerate with
+``PYTHONPATH=src python scripts/gen_golden_sweep.py`` and review the diff.
+"""
+import json
+import os
+
+from repro.core import suite
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden_sweep.json")
+RTOL = 1e-2  # generous vs float32 platform jitter, tight vs real drift
+
+
+def test_sweep_matches_golden_table():
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    got = suite.sweep_all()
+    assert set(got) == set(golden)
+    bad = []
+    for app, grid in got.items():
+        assert len(grid) == len(golden[app]) == 24
+        for (m, l), s in grid.items():
+            want = golden[app][f"{m}x{l}"]
+            if abs(s - want) > RTOL * abs(want):
+                bad.append((app, m, l, s, want))
+    assert not bad, f"{len(bad)} drifted cells, first 5: {bad[:5]}"

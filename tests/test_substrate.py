@@ -6,7 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # hypothesis is optional (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from repro.testing.hypothesis_shim import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.configs.base import SHAPES, InputShape

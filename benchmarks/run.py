@@ -63,6 +63,37 @@ def figures_4_to_10_scalability():
     return rows
 
 
+def sweep_llc():
+    """Fig-10 as a first-class batched study: the full LLC grid {256 KB, 1 MB}
+    for the memory-stressed apps vs a compute-bound control, one batch."""
+    from repro.core import engine as eng
+    from repro.core import suite
+    apps = ("streamcluster", "canneal", "swaptions", "blackscholes")
+    l2s = (256, 1024)
+    pairs = [(a, eng.VectorEngineConfig(mvl=mvl, lanes=8, l2_kb=l2))
+             for a in apps for l2 in l2s for mvl in (64, 256)]
+    t0 = time.perf_counter()
+    vals = suite.speedup_batch(pairs)
+    us_each = (time.perf_counter() - t0) * 1e6 / len(pairs)
+    return [(f"sweep_llc_{a}_{c.label()}", us_each, f"speedup={s:.2f}")
+            for (a, c), s in zip(pairs, vals)]
+
+
+def sweep_mshr():
+    """MSHR saturation: mshrs=1 serializes indexed-pattern (gather) misses —
+    canneal degrades, the unit-stride apps stay within noise."""
+    from repro.core import engine as eng
+    from repro.core import suite
+    apps = ("canneal", "blackscholes", "jacobi-2d")
+    pairs = [(a, eng.VectorEngineConfig(mvl=64, lanes=4, mshrs=m))
+             for a in apps for m in (1, 4, 16)]
+    t0 = time.perf_counter()
+    vals = suite.speedup_batch(pairs)
+    us_each = (time.perf_counter() - t0) * 1e6 / len(pairs)
+    return [(f"sweep_mshr_{a}_{c.label()}", us_each, f"speedup={s:.2f}")
+            for (a, c), s in zip(pairs, vals)]
+
+
 def sweep_wallclock(quick: bool = False):
     """The acceptance benchmark: full 24-config x 7-app paper sweep, batched
     engine vs the sequential per-(app, config) seed path."""
@@ -173,10 +204,11 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     if args.quick:
         fns = (table_3_to_9_characterization, figures_4_to_10_scalability,
+               sweep_llc, sweep_mshr,
                lambda: sweep_wallclock(quick=True))
     else:
         fns = (table_3_to_9_characterization, figures_4_to_10_scalability,
-               kernel_microbench, roofline_table,
+               sweep_llc, sweep_mshr, kernel_microbench, roofline_table,
                lambda: sweep_wallclock(quick=False))
     print("name,us_per_call,derived")
     for fn in fns:

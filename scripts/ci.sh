@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# One-command regression gate: tier-1 tests + the quick benchmark smoke.
+# One-command regression gate: tier-1 tests + docs gate + quick benchmark.
 #   scripts/ci.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -7,6 +7,19 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1 tests =="
 python -m pytest -x -q
+
+echo "== docs gate: doctests =="
+python -m pytest --doctest-modules -q \
+  src/repro/core/memory.py src/repro/core/suite.py
+
+echo "== docs gate: README quickstart snippet =="
+# extract the FIRST ```python fenced block from the README and execute it,
+# so the documented example cannot rot
+snippet="$(mktemp --suffix=.py)"
+trap 'rm -f "$snippet"' EXIT
+awk '/^```python/{if(!done){f=1};next} /^```/{if(f){f=0;done=1}} f' \
+  README.md > "$snippet"
+python "$snippet"
 
 echo "== quick benchmark smoke =="
 python benchmarks/run.py --quick

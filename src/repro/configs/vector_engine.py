@@ -4,8 +4,15 @@ Configs 1-24: MVL in {8,16,32,64,128,256} 64-bit elements x lanes in {1,2,4,8},
 renaming with 40 physical registers, in-order issue queues, one pipelined
 arithmetic unit per lane, one memory port into L2, ring interconnect —
 exactly the §5 sweep.  ``TABLE10[i]`` is config i+1.
+
+The memory-hierarchy variants are first-class batched studies: the Fig-10
+LLC grid (``TABLE10_L2_1MB``) and the MSHR saturation grid
+(``TABLE10_MSHR1``) run through the same compiled scan as the base grid —
+``engine.VectorEngineConfig.label()`` keeps their result keys distinct.
 """
 from __future__ import annotations
+
+import dataclasses
 
 from repro.core.engine import VectorEngineConfig
 
@@ -23,7 +30,13 @@ TABLE10 = tuple(
     for mvl in MVLS for lanes in LANES
 )
 
-# §5.7's second memory system: 1 MB L2 (Fig 10)
+# §5.7's second memory system: 1 MB LLC (Fig 10)
 TABLE10_L2_1MB = tuple(
-    cfg.__class__(**{**cfg.__dict__, "l2_kb": 1024}) for cfg in TABLE10
+    dataclasses.replace(cfg, l2_kb=1024) for cfg in TABLE10
+)
+
+# MSHR saturation study: a single miss-status register serializes every
+# demand (indexed/gather) miss — the knob the memory model makes live
+TABLE10_MSHR1 = tuple(
+    dataclasses.replace(cfg, mshrs=1) for cfg in TABLE10
 )

@@ -11,6 +11,9 @@ first-order effects:
   * start-up time = FU pipe depth + ceil(n_src / VRF read ports)  (§3.2.4)
   * one arithmetic instruction in flight across all lanes         (§3.2.3)
   * VMU serialization: one memory instruction at a time           (§3.2.5)
+  * analytic cache/MSHR/DRAM model: miss rates derived from each
+    access's stream footprint and the cache geometry, MSHR-gated
+    gather concurrency, shared DRAM bandwidth (repro.core.memory)  (§3.2.5)
   * ring vs crossbar interconnect cost for slides/reductions      (§3.2.6)
   * decoupling: scalar core runs ahead, queues absorb slack       (§3.1)
   * vfirst/vpopc results stall the scalar core                    (§4.1.4)
@@ -27,13 +30,14 @@ sweeps hit the jit cache.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, fields
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import isa
+from repro.core import memory
 
 MAX_RING = 64  # static ring-buffer capacity (>= max rob/queue/phys-in-flight)
 
@@ -56,14 +60,33 @@ class VectorEngineConfig:
     lat_l2: float = 12.0
     lat_dram: float = 100.0
     mshrs: int = 16
+    l1_kb: int = 32
     l2_kb: int = 256
+    # shared DRAM stream bandwidth (B/cycle); default is the calibrated
+    # constant in repro.core.memory (single source of truth)
+    dram_bw_bytes_cycle: float = memory.DRAM_BW_BYTES_PER_CYCLE
     scalar_freq_ghz: float = 2.0
     vector_freq_ghz: float = 1.0
     scalar_ipc: float = 2.0
     dispatch_latency: float = 5.0  # scalar commit -> vector engine dispatch
 
     def label(self) -> str:
-        return f"mvl{self.mvl}_l{self.lanes}"
+        """Result key: ``mvl{m}_l{l}`` plus one suffix per knob that differs
+        from the Table-10 defaults — derived from the dataclass fields, so
+        configs differing in *any* swept axis (LLC, MSHRs, ports, latencies,
+        interconnect, ...) never collide."""
+        s = f"mvl{self.mvl}_l{self.lanes}"
+        for f in fields(self):
+            v = getattr(self, f.name)
+            if f.name in ("mvl", "lanes") or v == f.default:
+                continue
+            if f.name == "ooo_issue":
+                s += "_ooo"
+            elif f.name == "interconnect":
+                s += f"_{v}"
+            else:
+                s += f"_{f.name}{v:g}"
+        return s
 
 
 # Calibrated latency classes (fit against the paper's §5 speedup anchors; see
@@ -96,7 +119,7 @@ def _make_step(params):
     """
     (lanes, phys_extra, rob_entries, q_entries, read_ports, line_elems,
      mem_ports, lat_l1, lat_l2, lat_dram, scalar_scale, dispatch_lat,
-     ooo_f, ring_f) = params
+     ooo_f, ring_f, l1_kb, l2_kb, mshrs_f, dram_line_cyc) = params
     sc_cost = jnp.asarray(SCALAR_CYCLES)
     pipe_depth = jnp.asarray(VEC_PIPE_DEPTH)
     elem_cost = jnp.asarray(VEC_ELEM_CYCLES)
@@ -105,7 +128,7 @@ def _make_step(params):
         (reg_ready, rob_ring, n_rob, phys_ring, n_phys, aq_ring, n_aq,
          mq_ring, n_mq, t_scalar, lane_free, vmu_free, last_aq, last_mq,
          last_commit, scalar_res, busy_lane, busy_vmu) = carry
-        kind, vl, fu, n_src, src1, src2, dst, mpat, m1, m2, s_count, dep = x
+        kind, vl, fu, n_src, src1, src2, dst, mpat, fp_kb, s_count, dep = x
 
         vlf = vl.astype(jnp.float32)
         # NOP padding rides the scalar path with s_count=0 / dep=False: it
@@ -152,15 +175,13 @@ def _make_step(params):
         exec_move = per_lane
         exec_mask = per_lane + hops  # vfirst/vpopc reduce a mask to a scalar
 
-        exp_lat = lat_l1 + m1 * (lat_l2 + m2 * lat_dram)
-        lines = jnp.ceil(vlf / line_elems)
-        # DRAM-missing lines pay a bandwidth term (~8 cycles/line at DDR3
-        # rates), not just latency: this is what makes the paper's Fig-10
-        # LLC-size study visible (hit-under-miss hides latency, not BW)
-        line_cost = 1.0 + m1 * m2 * 8.0
-        exec_unit = exp_lat + lines * line_cost / mem_ports
-        exec_gather = exp_lat + vlf * (1.0 + m1 * m2 * 2.0) / mem_ports
-        exec_mem = jnp.where(mpat == isa.MEM_UNIT, exec_unit, exec_gather)
+        # analytic memory hierarchy (§3.2.5): miss probabilities derived from
+        # the access's stream footprint x the cache geometry, MSHR-limited
+        # miss overlap, and a shared DRAM bandwidth term — all traced, so the
+        # LLC/MSHR knobs are live batch axes (repro.core.memory)
+        exec_mem = memory.vector_access_cycles(
+            vlf, mpat, fp_kb, line_elems, l1_kb, l2_kb, mshrs_f,
+            lat_l1, lat_l2, lat_dram, dram_line_cyc, mem_ports)
 
         exec_c = jnp.select(
             [kind == isa.VARITH, kind == isa.VLOAD, kind == isa.VSTORE,
@@ -253,7 +274,7 @@ _chunk_batch_jit = jax.jit(jax.vmap(_chunk_core))
 CHUNK = 1024
 
 _TRACE_FIELDS = ("kind", "vl", "fu", "n_src", "src1", "src2", "dst",
-                 "mem_pattern", "miss_l1", "miss_l2", "scalar_count",
+                 "mem_pattern", "footprint_kb", "scalar_count",
                  "dep_scalar")
 
 
@@ -274,6 +295,9 @@ def _cfg_params_np(cfg: VectorEngineConfig) -> tuple:
         np.float32(scalar_scale), np.float32(cfg.dispatch_latency),
         np.float32(1.0 if cfg.ooo_issue else 0.0),
         np.float32(1.0 if cfg.interconnect == "ring" else 0.0),
+        np.float32(cfg.l1_kb), np.float32(cfg.l2_kb), np.float32(cfg.mshrs),
+        np.float32(memory.dram_line_cycles(cfg.cache_line_bits,
+                                           cfg.dram_bw_bytes_cycle)),
     )
 
 

@@ -54,8 +54,10 @@ class Trace:
     src2: np.ndarray
     dst: np.ndarray            # int32 [N] logical dest reg or -1
     mem_pattern: np.ndarray    # int32 [N] MEM_* for loads/stores
-    miss_l1: np.ndarray        # f32 [N] P(L1 miss) per access
-    miss_l2: np.ndarray        # f32 [N] P(L2 miss | L1 miss)
+    footprint_kb: np.ndarray   # f32 [N] working-set footprint (KB) of the
+                               #   stream this access belongs to; miss
+                               #   probabilities are derived from it by
+                               #   repro.core.memory at simulation time
     scalar_count: np.ndarray   # int32 [N] for SCALAR_BLOCK
     dep_scalar: np.ndarray     # bool [N] consumes the engine's scalar result
 
@@ -75,8 +77,7 @@ class Trace:
             src2=get("src2", -1).astype(np.int32),
             dst=get("dst", -1).astype(np.int32),
             mem_pattern=get("mem_pattern", MEM_UNIT).astype(np.int32),
-            miss_l1=get("miss_l1", 0.0).astype(np.float32),
-            miss_l2=get("miss_l2", 0.0).astype(np.float32),
+            footprint_kb=get("footprint_kb", 0.0).astype(np.float32),
             scalar_count=get("scalar_count", 0).astype(np.int32),
             dep_scalar=get("dep_scalar", False).astype(bool),
         )
@@ -111,7 +112,7 @@ def nop_trace(n: int) -> Trace:
     return Trace(
         kind=i32(NOP), vl=i32(0), fu=i32(FU_SIMPLE), n_src=i32(0),
         src1=i32(-1), src2=i32(-1), dst=i32(-1), mem_pattern=i32(MEM_UNIT),
-        miss_l1=np.zeros(n, np.float32), miss_l2=np.zeros(n, np.float32),
+        footprint_kb=np.zeros(n, np.float32),
         scalar_count=i32(0), dep_scalar=np.zeros(n, bool),
     )
 
@@ -138,14 +139,14 @@ def varith(vl, fu=FU_SIMPLE, n_src=2, src1=0, src2=1, dst=2) -> dict:
     return dict(kind=VARITH, vl=vl, fu=fu, n_src=n_src, src1=src1, src2=src2, dst=dst)
 
 
-def vload(vl, dst=0, pattern=MEM_UNIT, miss_l1=0.1, miss_l2=0.05) -> dict:
+def vload(vl, dst=0, pattern=MEM_UNIT, footprint_kb=64.0) -> dict:
     return dict(kind=VLOAD, vl=vl, dst=dst, mem_pattern=pattern, n_src=0,
-                miss_l1=miss_l1, miss_l2=miss_l2)
+                footprint_kb=footprint_kb)
 
 
-def vstore(vl, src1=0, pattern=MEM_UNIT, miss_l1=0.1, miss_l2=0.05) -> dict:
+def vstore(vl, src1=0, pattern=MEM_UNIT, footprint_kb=64.0) -> dict:
     return dict(kind=VSTORE, vl=vl, src1=src1, dst=-1, mem_pattern=pattern,
-                n_src=1, miss_l1=miss_l1, miss_l2=miss_l2)
+                n_src=1, footprint_kb=footprint_kb)
 
 
 def vslide(vl, src1=0, dst=1) -> dict:

@@ -1,0 +1,165 @@
+"""Analytic memory-hierarchy model: caches, MSHRs, DRAM bandwidth (§3.2.5).
+
+Instead of per-app hand-coded miss constants, every vector memory access
+derives its L1/L2 miss probabilities from three things it actually depends on:
+
+  * the **footprint** of the stream it belongs to (the working set, in KB,
+    between successive reuses of the same data — a per-record trace field),
+  * the **access pattern** (unit / strided / indexed),
+  * the **cache geometry** (``l1_kb``, ``l2_kb``, ``cache_line_bits``).
+
+The steady-state residency model is the classic capacity argument (gem5's
+classic memory system makes the same first-order approximation): a stream
+whose footprint ``F`` is re-traversed through a cache of capacity ``C`` keeps
+``min(1, C/F)`` of its lines resident, so the per-line miss probability is
+``1 - min(1, C/F)``.  The L2 probability is conditional on missing L1
+(inclusive hierarchy): ``P(L2 miss | L1 miss) = (1 - r2) / (1 - r1)``.
+
+Service time splits into a **lead-in** (the exposed latency of the first
+misses, before the pipeline fills) and a **throughput** term per access, the
+max of three rates:
+
+  * L1/port issue: one access per ``mem_ports`` per cycle,
+  * L2 miss service: ``lat_l2 / overlap`` outstanding-miss concurrency,
+  * DRAM: the larger of the MSHR-limited latency rate ``lat_dram / overlap``
+    and the **bandwidth** cost of moving a full line, ``cache_line_bits / 8 /
+    DRAM_BW_BYTES_PER_CYCLE``.  DRAM bandwidth is shared — it does *not*
+    scale with ``mem_ports``.
+
+``overlap`` is where the ``mshrs`` knob lives.  Regular streams (unit,
+strided) are covered by the decoupled engine's run-ahead address generation
+(§3.1): a stream-prefetch window of ``PREFETCH_DEPTH`` lines that does not
+consume demand MSHRs (stream buffers in the Jouppi 1990 sense), so their
+latency is hidden regardless of the MSHR file.  Indexed (gather) accesses are
+demand misses: their concurrency is ``min(mshrs, DRAM_MLP)``, so ``mshrs=1``
+fully serializes the random-walk apps (canneal) while leaving unit-stride
+apps untouched.
+
+Everything here is a pure function of traced scalars, so the engine's scan
+step stays vmappable over the config axis.
+
+>>> m1, m2 = miss_probs(13824.0, 32.0, 256.0)   # 13.5 MB stream, 32K/256K
+>>> round(float(m1), 3), round(float(m2), 3)
+(0.998, 0.984)
+>>> m1, m2 = miss_probs(16.0, 32.0, 256.0)      # fits in L1
+>>> float(m1), float(m2)
+(0.0, 0.0)
+>>> m2_small = miss_probs(768.0, 32.0, 256.0)[1]
+>>> m2_big = miss_probs(768.0, 32.0, 1024.0)[1]
+>>> float(m2_big) < float(m2_small)             # bigger LLC, fewer DRAM trips
+True
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import isa
+
+# Effective DRAM stream bandwidth, bytes per vector-engine cycle (1 GHz).
+# 4 B/cycle = 4 GB/s sustained — DDR3-class effective (not peak) bandwidth,
+# the paper's evaluation-era memory system.  A 512-bit line costs 16 cycles.
+DRAM_BW_BYTES_PER_CYCLE = 4.0
+
+# Bank-level parallelism cap: demand misses cannot overlap more than this in
+# DRAM even with a larger MSHR file.
+DRAM_MLP = 8.0
+
+# Run-ahead depth of the decoupled VMU's stream prefetcher (lines).  Regular
+# (unit/strided) streams are serviced from this window without consuming
+# demand MSHRs, so `mshrs` does not gate them.
+PREFETCH_DEPTH = 16.0
+
+
+def residency(footprint_kb, cache_kb):
+    """Steady-state fraction of a stream's lines resident in a cache.
+
+    >>> float(residency(16.0, 32.0))
+    1.0
+    >>> float(residency(64.0, 32.0))
+    0.5
+    """
+    return jnp.minimum(1.0, cache_kb / jnp.maximum(footprint_kb, 1e-6))
+
+
+def miss_probs(footprint_kb, l1_kb, l2_kb):
+    """Per-line (m1, m2): P(L1 miss) and P(L2 miss | L1 miss).
+
+    Inclusive hierarchy: of the lines not resident in L1, the fraction also
+    absent from L2 is ``(1 - r2) / (1 - r1)``.  Zero-footprint entries (NOPs,
+    non-memory instructions) come out as (0, 0).
+    """
+    r1 = residency(footprint_kb, l1_kb)
+    r2 = residency(footprint_kb, l2_kb)
+    m1 = 1.0 - r1
+    m2 = jnp.clip((1.0 - r2) / jnp.maximum(m1, 1e-6), 0.0, 1.0)
+    return m1, m2
+
+
+def overlap(pattern, mshrs):
+    """Outstanding-miss concurrency available to one vector memory access.
+
+    Indexed gathers are demand misses gated by the MSHR file (capped by DRAM
+    bank parallelism); regular streams ride the run-ahead prefetch window.
+
+    >>> float(overlap(isa.MEM_INDEXED, 16.0))
+    8.0
+    >>> float(overlap(isa.MEM_INDEXED, 1.0))
+    1.0
+    >>> float(overlap(isa.MEM_UNIT, 1.0))      # prefetched: MSHR-independent
+    16.0
+    """
+    return jnp.where(jnp.asarray(pattern) == isa.MEM_INDEXED,
+                     jnp.minimum(mshrs, DRAM_MLP), PREFETCH_DEPTH)
+
+
+def dram_line_cycles(cache_line_bits, bw_bytes_cycle=DRAM_BW_BYTES_PER_CYCLE):
+    """Bandwidth cost of moving one cache line from DRAM (cycles).
+
+    >>> float(dram_line_cycles(512.0))
+    16.0
+    """
+    return cache_line_bits / 8.0 / bw_bytes_cycle
+
+
+def lead_cycles(m1, m2, lat_l1, lat_l2, lat_dram, ovl):
+    """Exposed lead-in latency of a vector memory instruction: the expected
+    miss path of the first accesses, amortized over the miss concurrency."""
+    return lat_l1 + (m1 * lat_l2 + m1 * m2 * lat_dram) / ovl
+
+
+def cycles_per_access(m1, m2, lat_l2, lat_dram, ovl, line_cyc, mem_ports):
+    """Steady-state throughput cost of one access (one line for unit stride,
+    one element for strided/indexed): max of the port rate, the MSHR-limited
+    L2 and DRAM service rates, and the shared DRAM bandwidth.
+
+    With 16 cycles/line DRAM bandwidth and full overlap, a pure DRAM stream
+    costs 16 cycles per line; with ``ovl=1`` the same stream pays the full
+    DRAM latency per miss:
+
+    >>> float(cycles_per_access(1.0, 1.0, 12.0, 100.0, 8.0, 16.0, 1.0))
+    16.0
+    >>> float(cycles_per_access(1.0, 1.0, 12.0, 100.0, 1.0, 16.0, 1.0))
+    100.0
+    """
+    port = 1.0 / mem_ports
+    l2 = m1 * lat_l2 / ovl
+    dram = m1 * m2 * jnp.maximum(lat_dram / ovl, line_cyc)
+    return jnp.maximum(port, jnp.maximum(l2, dram))
+
+
+def vector_access_cycles(vlf, pattern, footprint_kb, line_elems, l1_kb, l2_kb,
+                         mshrs, lat_l1, lat_l2, lat_dram, line_cyc, mem_ports):
+    """Total VMU occupancy (cycles) of one vector memory instruction.
+
+    Unit-stride accesses are line-granular (``ceil(vl / line_elems)``
+    accesses); strided and indexed accesses touch one line per element.
+    All arguments may be traced scalars — this is called inside the engine's
+    vmapped scan step.
+    """
+    m1, m2 = miss_probs(footprint_kb, l1_kb, l2_kb)
+    ovl = overlap(pattern, mshrs)
+    lead = lead_cycles(m1, m2, lat_l1, lat_l2, lat_dram, ovl)
+    per = cycles_per_access(m1, m2, lat_l2, lat_dram, ovl, line_cyc, mem_ports)
+    n_acc = jnp.where(jnp.asarray(pattern) == isa.MEM_UNIT,
+                      jnp.ceil(vlf / line_elems), vlf)
+    return lead + n_acc * per

@@ -10,6 +10,10 @@ Every application encodes two things:
 2. ``body(mvl)`` — a representative loop-body trace (isa.Trace) for the
    cycle-level engine.  Per-chunk scalar overhead and the arithmetic class mix
    (simple/mul/div/transcendental) drive the *timing* reproduction of §5.
+   Memory accesses carry per-stream working-set *footprints* (KB, derived
+   from the published input sets where possible); the analytic hierarchy in
+   ``repro.core.memory`` turns footprint x pattern x cache geometry into
+   miss behavior at simulation time, so no app hard-codes a miss rate.
 
 The large input set is modeled throughout (as in the paper's study).
 """
@@ -103,11 +107,15 @@ def _arith_seq(n, mix, vl, start_reg=4):
 # ===========================================================================
 
 _BS_UNITS = 6_553_600
+_BS_OPTIONS = 65_536                   # unique options (x 100 runs = UNITS)
 _BS_MEM_PER = 27
 _BS_ARITH_PER = 269
 _BS_S1 = 243.65
 _BS_S0 = 285_041_709
 _BS_MIX = {"simple": 0.58, "mul": 0.36, "div": 0.04, "trans": 0.02}
+# memory streams: the option arrays (27 doubles/option) are re-swept on each
+# of the 100 runs, so the reuse distance is the full option data set
+_BS_FOOTPRINT_KB = _BS_OPTIONS * _BS_MEM_PER * 8 / 1024   # ~13.8 MB
 
 
 def _bs_counts(mvl):
@@ -125,10 +133,10 @@ def _bs_body(mvl, cfg):
     vl = min(mvl, cfg.mvl) if cfg else mvl
     recs = [scalar_block(_BS_S1)]
     for i in range(_BS_MEM_PER - 5):
-        recs.append(vload(vl, dst=i % 4, miss_l1=0.15, miss_l2=0.1))
+        recs.append(vload(vl, dst=i % 4, footprint_kb=_BS_FOOTPRINT_KB))
     recs += _arith_seq(_BS_ARITH_PER, _BS_MIX, vl)
     for i in range(5):
-        recs.append(vstore(vl, src1=4 + i, miss_l1=0.15, miss_l2=0.1))
+        recs.append(vstore(vl, src1=4 + i, footprint_kb=_BS_FOOTPRINT_KB))
     return Trace.from_records(recs)
 
 
@@ -145,6 +153,9 @@ _J2_CHUNK8 = 13_056_000
 _J2_MEM_PER, _J2_ARITH_PER, _J2_MANIP_PER = 5, 19.906, 4.977
 _J2_S0, _J2_S1 = 137_308_272, 87.16
 _J2_MIX = {"simple": 0.6, "mul": 0.4}
+# grid points per sweep = chunks/iter x 8 elems; the stencil re-reads the
+# A/B grids once per iteration, so the stream footprint is both grids
+_J2_GRID_KB = 2 * (_J2_CHUNK8 / 4000 * 8) * 8 / 1024      # ~408 KB
 
 
 def _j2_counts(mvl):
@@ -163,14 +174,14 @@ def _j2_body(mvl, cfg):
     vl = min(mvl, cfg.mvl) if cfg else mvl
     recs = [scalar_block(_J2_S1)]
     for i in range(4):
-        recs.append(vload(vl, dst=i, miss_l1=0.12, miss_l2=0.02))
+        recs.append(vload(vl, dst=i, footprint_kb=_J2_GRID_KB))
     recs.append(vslide(vl, src1=0, dst=4))
     recs.append(vslide(vl, src1=0, dst=5))
     recs += _arith_seq(20, _J2_MIX, vl, start_reg=6)
     recs.append(vslide(vl, src1=6, dst=20))
     recs.append(vslide(vl, src1=7, dst=21))
     recs.append(vslide(vl, src1=8, dst=22))
-    recs.append(vstore(vl, src1=20, miss_l1=0.12, miss_l2=0.02))
+    recs.append(vstore(vl, src1=20, footprint_kb=_J2_GRID_KB))
     return Trace.from_records(recs)
 
 
@@ -184,6 +195,8 @@ def _j2_body(mvl, cfg):
 # ===========================================================================
 
 _PF_MIX = {"simple": 0.50, "mul": 0.30, "div": 0.05, "trans": 0.15}
+# particle state arrays (positions/weights, ~100k particles of 8-B doubles)
+_PF_STATE_KB = 781.0
 
 
 def _pf_counts(mvl):
@@ -203,7 +216,7 @@ def _pf_chunks(mvl):
 
 def _pf_body(mvl, cfg):
     vl = min(mvl, cfg.mvl) if cfg else mvl
-    recs = [vload(vl, dst=0, miss_l1=0.1, miss_l2=0.05)]
+    recs = [vload(vl, dst=0, footprint_kb=_PF_STATE_KB)]
     # Box-Muller + motion model: log/cos/sqrt heavy
     recs += _arith_seq(760, _PF_MIX, vl)
     # sequential-search (guess update): every inner iteration compares, runs
@@ -227,6 +240,10 @@ def _pf_body(mvl, cfg):
 
 _PATH_CHUNK8 = 20_054_016
 _PATH_S0, _PATH_S1 = 268_401_305, 38.33
+# one 100k-column row of 8-B path costs; the result row is re-read on the
+# next row pass, the wall is streamed once (cold: footprint = whole wall)
+_PATH_ROW_KB = 100_000 * 8 / 1024                          # ~781 KB
+_PATH_WALL_KB = _PATH_CHUNK8 * 8 * 8 / 1024                # cold stream
 
 
 def _path_counts(mvl):
@@ -244,9 +261,9 @@ def _path_counts(mvl):
 def _path_body(mvl, cfg):
     vl = min(mvl, cfg.mvl) if cfg else mvl
     recs = [scalar_block(_PATH_S1)]
-    recs.append(vload(vl, dst=0, miss_l1=0.1, miss_l2=0.03))
-    recs.append(vload(vl, dst=1, miss_l1=0.1, miss_l2=0.03))
-    recs.append(vload(vl, dst=2, miss_l1=0.05, miss_l2=0.02))
+    recs.append(vload(vl, dst=0, footprint_kb=_PATH_WALL_KB))
+    recs.append(vload(vl, dst=1, footprint_kb=_PATH_ROW_KB))
+    recs.append(vload(vl, dst=2, footprint_kb=_PATH_ROW_KB))
     recs.append(vslide(vl, src1=1, dst=3))
     recs.append(vslide(vl, src1=1, dst=4))
     # min(left, center, right) + add weight
@@ -258,8 +275,8 @@ def _path_body(mvl, cfg):
     recs.append(vslide(vl, src1=8, dst=10))
     recs.append(varith(vl, FU_SIMPLE, src1=9, src2=10, dst=11))
     recs.append(varith(vl, FU_SIMPLE, src1=11, src2=8, dst=12))
-    recs.append(vload(vl, dst=13, miss_l1=0.1, miss_l2=0.03))
-    recs.append(vstore(vl, src1=12, miss_l1=0.1, miss_l2=0.03))
+    recs.append(vload(vl, dst=13, footprint_kb=_PATH_ROW_KB))
+    recs.append(vstore(vl, src1=12, footprint_kb=_PATH_ROW_KB))
     return Trace.from_records(recs)
 
 
@@ -275,6 +292,11 @@ def _path_body(mvl, cfg):
 _SC_CALLS = 59_533_158
 _SC_DIMS = 128
 _SC_MIX = {"simple": 0.5, "mul": 0.5}
+# active set of a dist() call sequence: the candidate-center block plus the
+# current window of streaming points (the full point set is ~60 MB, but the
+# centers are re-read every call — this is the reuse distance that matters,
+# and it is the lever of the Fig-10 LLC study: 256 KB spills it, 1 MB holds)
+_SC_WSET_KB = 768.0
 
 
 def _sc_counts(mvl):
@@ -300,7 +322,7 @@ def _sc_body(mvl, cfg):
     # streaming distance computation: L2-resident at best (memory bound)
     for i in range(iters):
         recs.append(scalar_block(2.5))
-        recs.append(vload(vl_eff, dst=i % 8, miss_l1=0.65, miss_l2=0.45))
+        recs.append(vload(vl_eff, dst=i % 8, footprint_kb=_SC_WSET_KB))
         recs.append(varith(vl_eff, FU_MUL, src1=i % 8, src2=8, dst=9 + i % 8))
     recs.append(vreduce(mvl, src1=9, dst=20, fu=FU_SIMPLE))
     recs.append(vmask_scalar(mvl, src1=20))
@@ -322,7 +344,7 @@ _SW_ELEMS = 17_314_316_288
 _SW_MIX = {"simple": 0.50, "mul": 0.35, "div": 0.05, "trans": 0.10}
 
 
-def _sw_counts(mvl, l2_kb=256):
+def _sw_counts(mvl):
     instr = _SW_ELEMS / mvl
     return Counts(
         scalar_code_total=26_846_776_223,
@@ -337,25 +359,25 @@ def _sw_chunks(mvl):
     return _SW_ELEMS / mvl / 29
 
 
-def _sw_l2_miss(mvl, l2_kb):
-    """Fig-10 LLC model: the HJM working set grows with the block size (=VL);
-    when it spills the L2, misses go to DRAM.  Calibrated to the paper's
-    observation: 256 KB L2 degrades at MVL>=128, 1 MB L2 holds to 256.
-    Returns (miss_l1, miss_l2): L1 (32 KB) also thrashes at large blocks."""
-    working_kb = mvl * 8 * 220 / 1024  # ~220 vectors of VL doubles live
-    frac = min(1.0, max(0.0, (working_kb - 0.5 * l2_kb) / (0.75 * l2_kb)))
-    return 0.25 + 0.4 * frac, 0.02 + 0.68 * frac
+def _sw_footprint_kb(vl):
+    """Fig-10 lever: the HJM working set grows with the block size (=VL) —
+    ~350 vectors of VL doubles live across the HJM path state (calibrated to
+    the paper's stated observation: a 256 KB L2 degrades from MVL=128 up, a
+    1 MB L2 holds through MVL=256).  At small VL it fits the L1 (22 KB at
+    MVL=8); at MVL=128 it is 350 KB (spills 256 KB, fits 1 MB) and at
+    MVL=256 it is 700 KB — the analytic model in repro.core.memory turns the
+    footprint into the observed degradation."""
+    return vl * 8 * 350 / 1024
 
 
 def _sw_body(mvl, cfg):
     vl = min(mvl, cfg.mvl) if cfg else mvl
-    l2_kb = cfg.l2_kb if cfg else 256
-    m1, m2 = _sw_l2_miss(vl, l2_kb)
+    fp = _sw_footprint_kb(vl)
     recs = [scalar_block(52.35)]
     for i in range(4):
-        recs.append(vload(vl, dst=i, miss_l1=m1, miss_l2=m2))
+        recs.append(vload(vl, dst=i, footprint_kb=fp))
     recs += _arith_seq(24, _SW_MIX, vl)
-    recs.append(vstore(vl, src1=10, miss_l1=m1, miss_l2=m2))
+    recs.append(vstore(vl, src1=10, footprint_kb=fp))
     return Trace.from_records(recs)
 
 
@@ -375,6 +397,11 @@ _CA_N = 1_920_000
 _CA_REQ = 210_116_186
 _CA_MOVES = 60_928_171
 _CA_MIX = {"simple": 1.0}
+# hot slice of the netlist the random swap walk actually revisits between
+# reuses (~3 MB of a far larger netlist): indexed loads miss both caches at
+# 256 KB, and a 1 MB LLC captures a third of it — the memory.py model turns
+# this into the canneal LLC sensitivity
+_CA_HOT_KB = 3072.0
 # fan-out distribution (fitted to E[f]=10.15, P(f>8)=.395, P(f>16)=.003)
 _CA_FAN = {6: 0.18, 8: 0.422, 12: 0.15, 14: 0.12, 16: 0.125, 20: 0.003}
 
@@ -430,9 +457,9 @@ def _ca_body(mvl, cfg):
         for it in range(iters):
             recs.append(scalar_block(99.4 if it else 12))
             # pseudo-random netlist walk: indexed loads mostly miss to DRAM
-            recs.append(vload(vl, dst=0, miss_l1=0.75, miss_l2=0.8,
+            recs.append(vload(vl, dst=0, footprint_kb=_CA_HOT_KB,
                               pattern=MEM_INDEXED))
-            recs.append(vload(vl, dst=1, miss_l1=0.75, miss_l2=0.8,
+            recs.append(vload(vl, dst=1, footprint_kb=_CA_HOT_KB,
                               pattern=MEM_INDEXED))
             recs += _arith_seq(22, _CA_MIX, vl)
         recs.append(vreduce(vl, src1=6, dst=20))

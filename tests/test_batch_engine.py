@@ -35,11 +35,13 @@ def test_batch_matches_sequential_on_table10_grid():
 
 @pytest.mark.parametrize("ooo", [False, True])
 @pytest.mark.parametrize("ic", ["ring", "crossbar"])
-def test_batch_matches_sequential_flag_grid(ooo, ic):
-    """The formerly-static ooo/interconnect flags, now traced selects, still
+@pytest.mark.parametrize("l2_kb,mshrs", [(256, 16), (1024, 1)])
+def test_batch_matches_sequential_flag_grid(ooo, ic, l2_kb, mshrs):
+    """The formerly-static ooo/interconnect flags — and the memory-hierarchy
+    knobs the analytic model made live — are traced selects and still
     produce sequential-identical results in a mixed batch."""
     cfgs = [eng.VectorEngineConfig(mvl=m, lanes=l, ooo_issue=ooo,
-                                   interconnect=ic)
+                                   interconnect=ic, l2_kb=l2_kb, mshrs=mshrs)
             for m, l in ((8, 1), (64, 4), (256, 8))]
     body = tracegen.body_for("jacobi-2d", 64, cfgs[0])
     recs = [isa.vreduce(128, src1=1, dst=2), isa.vslide(128, src1=2, dst=3)]

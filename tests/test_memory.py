@@ -1,0 +1,176 @@
+"""The analytic memory hierarchy (repro.core.memory) + its live knobs.
+
+Covers the ISSUE acceptance axes: miss-rate monotonicity in the cache sizes,
+MSHR saturation for indexed-pattern apps only, the Fig-10 qualitative claim
+(bigger LLC helps memory-stressed apps, not compute-bound ones) through the
+batched sweep path, and jit-cache stability of the new traced knobs.
+"""
+import numpy as np
+import pytest
+
+from repro.core import engine as eng
+from repro.core import isa, memory, suite, tracegen
+
+
+# ---------------------------------------------------------------- model unit
+
+def test_miss_probs_monotone_in_l2():
+    """P(L2 miss | L1 miss) never increases with LLC capacity."""
+    for fp in (64.0, 768.0, 3072.0, 13824.0):
+        m2s = [float(memory.miss_probs(fp, 32.0, l2)[1])
+               for l2 in (64.0, 128.0, 256.0, 512.0, 1024.0, 4096.0)]
+        assert all(a >= b - 1e-7 for a, b in zip(m2s, m2s[1:])), (fp, m2s)
+
+
+def test_miss_probs_monotone_in_footprint():
+    for l2 in (256.0, 1024.0):
+        m1s, m2s = zip(*[[float(v) for v in memory.miss_probs(fp, 32.0, l2)]
+                         for fp in (8.0, 64.0, 512.0, 4096.0, 65536.0)])
+        assert all(a <= b + 1e-7 for a, b in zip(m1s, m1s[1:]))
+        assert all(a <= b + 1e-7 for a, b in zip(m2s, m2s[1:]))
+
+
+def test_miss_probs_edge_cases():
+    m1, m2 = memory.miss_probs(0.0, 32.0, 256.0)   # NOP / non-memory entries
+    assert float(m1) == 0.0 and float(m2) == 0.0
+    m1, m2 = memory.miss_probs(16.0, 32.0, 256.0)  # fits in L1
+    assert float(m1) == 0.0
+    m1, m2 = memory.miss_probs(1e9, 32.0, 256.0)   # cold stream
+    assert float(m1) > 0.99 and float(m2) > 0.99
+
+
+def test_overlap_gates_indexed_only():
+    assert float(memory.overlap(isa.MEM_INDEXED, 1.0)) == 1.0
+    assert float(memory.overlap(isa.MEM_INDEXED, 16.0)) == memory.DRAM_MLP
+    for pat in (isa.MEM_UNIT, isa.MEM_STRIDED):
+        assert float(memory.overlap(pat, 1.0)) == memory.PREFETCH_DEPTH
+
+
+def test_access_cycles_monotone_in_mshrs():
+    """More MSHRs never slow an indexed access down; saturation beyond the
+    DRAM bank-parallelism cap."""
+    def t(m):
+        return float(memory.vector_access_cycles(
+            64.0, isa.MEM_INDEXED, 3072.0, 8.0, 32.0, 256.0, float(m),
+            4.0, 12.0, 100.0, 16.0, 1.0))
+    times = [t(m) for m in (1, 2, 4, 8, 16, 32)]
+    assert all(a >= b - 1e-6 for a, b in zip(times, times[1:])), times
+    assert times[0] > 3 * times[-1]          # mshrs=1 is a real cliff
+    assert times[-2] == times[-1]            # capped at DRAM_MLP
+
+
+# ------------------------------------------------------------- engine knobs
+
+def _time(app, cfg, tiles=8):
+    return eng.simulate(tracegen.body_for(app, cfg.mvl, cfg).tile(tiles),
+                        cfg)["time"]
+
+
+def test_mshr1_degrades_canneal_not_unit_stride_apps():
+    """mshrs=1 serializes the indexed netlist walk; unit-stride apps are
+    serviced by the decoupled prefetch window and must not move."""
+    for app, mvl in (("canneal", 16),):
+        base = _time(app, eng.VectorEngineConfig(mvl=mvl, lanes=4))
+        m1 = _time(app, eng.VectorEngineConfig(mvl=mvl, lanes=4, mshrs=1))
+        assert m1 > 1.2 * base, (app, base, m1)
+    for app in ("blackscholes", "jacobi-2d", "swaptions"):
+        base = _time(app, eng.VectorEngineConfig(mvl=64, lanes=4))
+        m1 = _time(app, eng.VectorEngineConfig(mvl=64, lanes=4, mshrs=1))
+        assert abs(m1 - base) <= 1e-3 * base, (app, base, m1)
+
+
+def test_speedup_monotone_in_l2_for_memory_stressed_apps():
+    """Fig-10 qualitative claim via the batched path: growing the LLC
+    monotonically helps streamcluster and canneal, and does ~nothing for the
+    compute-bound swaptions points (small/mid MVL, working set < 256 KB)."""
+    l2s = (256, 512, 1024)
+    pairs = [(a, eng.VectorEngineConfig(mvl=64, lanes=4, l2_kb=l2))
+             for a in ("streamcluster", "canneal", "swaptions") for l2 in l2s]
+    vals = suite.speedup_batch(pairs)
+    by_app = {a: vals[i * len(l2s):(i + 1) * len(l2s)]
+              for i, a in enumerate(("streamcluster", "canneal", "swaptions"))}
+    for app in ("streamcluster", "canneal"):
+        s = by_app[app]
+        assert s[0] < s[1] < s[2], (app, s)
+        assert s[2] > 1.05 * s[0], (app, s)            # a real gain
+    s = by_app["swaptions"]
+    assert abs(s[2] - s[0]) <= 0.01 * s[0], s          # within noise
+
+
+def test_swaptions_llc_crossover_at_large_mvl():
+    """swaptions IS LLC-sensitive where the paper says it is: the VL-scaled
+    HJM working set spills 256 KB at MVL=256 but fits in 1 MB."""
+    small = suite.speedup("swaptions",
+                          eng.VectorEngineConfig(mvl=256, lanes=8, l2_kb=256))
+    big = suite.speedup("swaptions",
+                        eng.VectorEngineConfig(mvl=256, lanes=8, l2_kb=1024))
+    assert big > 1.1 * small
+
+
+def test_dram_bandwidth_shared_across_mem_ports():
+    """A DRAM-bound stream must not speed up with more L2 ports (the
+    bandwidth term is shared); an L2-resident stream must."""
+    fp_dram, fp_l2 = 1e6, 128.0
+    def t(fp, ports):
+        tr = isa.Trace.from_records(
+            [isa.vload(256, dst=i, footprint_kb=fp) for i in range(8)])
+        return eng.simulate(
+            tr, eng.VectorEngineConfig(mvl=256, lanes=8, mem_ports=ports))["time"]
+    assert t(fp_dram, 4) >= 0.95 * t(fp_dram, 1)
+    assert t(fp_l2, 4) < 0.75 * t(fp_l2, 1)
+
+
+def test_batched_equals_sequential_on_memory_knobs():
+    """Batched-vs-sequential equivalence extended to the new axes: mixed
+    l1_kb/l2_kb/mshrs/dram-bw configs in one batch."""
+    cfgs = [eng.VectorEngineConfig(mvl=64, lanes=4),
+            eng.VectorEngineConfig(mvl=64, lanes=4, l2_kb=1024),
+            eng.VectorEngineConfig(mvl=64, lanes=4, mshrs=1),
+            eng.VectorEngineConfig(mvl=64, lanes=4, l1_kb=64,
+                                   dram_bw_bytes_cycle=8.0)]
+    for app in ("canneal", "streamcluster"):
+        traces = [tracegen.body_for(app, c.mvl, c).tile(2) for c in cfgs]
+        for got, tr, cfg in zip(eng.simulate_batch(traces, cfgs), traces, cfgs):
+            want = eng.simulate(tr, cfg)
+            for k in want:
+                assert abs(got[k] - want[k]) <= 1e-5 * max(abs(want[k]), 1.0)
+
+
+def test_llc_sweep_reuses_compiled_executable():
+    """Repeat LLC/MSHR sweeps must not grow the jit cache: the new knobs are
+    traced values, never compile-time constants."""
+    pairs = [("canneal", eng.VectorEngineConfig(mvl=16, lanes=2, l2_kb=256))]
+    suite.speedup_batch(pairs)
+    before = eng.jit_cache_size()
+    if before == -1:
+        pytest.skip("installed JAX exposes no jit cache introspection")
+    pairs = [(a, eng.VectorEngineConfig(mvl=16, lanes=2, l2_kb=l2, mshrs=m))
+             for a in ("canneal", "swaptions")
+             for l2 in (256, 1024) for m in (1, 16)]
+    suite.speedup_batch(pairs)
+    assert eng.jit_cache_size() == before
+
+
+def test_config_labels_distinct_across_memory_knobs():
+    """ISSUE satellite: configs differing only in l2_kb/mshrs/interconnect
+    must not collide to the same label."""
+    cfgs = [eng.VectorEngineConfig(mvl=256, lanes=8),
+            eng.VectorEngineConfig(mvl=256, lanes=8, l2_kb=1024),
+            eng.VectorEngineConfig(mvl=256, lanes=8, mshrs=1),
+            eng.VectorEngineConfig(mvl=256, lanes=8, l1_kb=64),
+            eng.VectorEngineConfig(mvl=256, lanes=8, dram_bw_bytes_cycle=8.0),
+            eng.VectorEngineConfig(mvl=256, lanes=8, interconnect="crossbar"),
+            eng.VectorEngineConfig(mvl=256, lanes=8, ooo_issue=True)]
+    labels = [c.label() for c in cfgs]
+    assert len(set(labels)) == len(labels), labels
+    assert labels[0] == "mvl256_l8"          # Table-10 defaults keep old keys
+
+
+def test_table10_variant_grids():
+    from repro.configs import vector_engine as ve
+    assert len(ve.TABLE10_L2_1MB) == len(ve.TABLE10_MSHR1) == 24
+    assert all(c.l2_kb == 1024 for c in ve.TABLE10_L2_1MB)
+    assert all(c.mshrs == 1 for c in ve.TABLE10_MSHR1)
+    labels = {c.label() for c in
+              ve.TABLE10 + ve.TABLE10_L2_1MB + ve.TABLE10_MSHR1}
+    assert len(labels) == 72

@@ -16,17 +16,23 @@ import numpy as np
 from repro.core import engine as eng
 from repro.core import isa, tracegen
 
-# paper Table 2 rows we can check quantitatively:
+# paper Table 2 rows we can check quantitatively (extended with the three
+# frontend-derived ML workloads):
 #   interconnect-heavy (slides/reductions): jacobi-2d, pathfinder,
-#       canneal/streamcluster/swaptions (reductions)
+#       canneal/streamcluster/swaptions (reductions), the attention kernels
+#       (online-softmax + dot reductions), ssd_scan (cumsum slide ladder)
 #   indexed memory: canneal
-#   intensive scalar-core communication: canneal, particlefilter, streamcluster
+#   intensive scalar-core communication: canneal, particlefilter,
+#       streamcluster, and both attention kernels (the m/l running-statistics
+#       update consumes the reductions' scalar results)
 EXPECT = {
-    "interconnect": {"jacobi-2d", "pathfinder", "canneal", "streamcluster"},
+    "interconnect": {"jacobi-2d", "pathfinder", "canneal", "streamcluster",
+                     "flash_attention", "decode_attention", "ssd_scan"},
     "indexed": {"canneal"},
-    "scalar_comm": {"canneal", "particlefilter", "streamcluster"},
+    "scalar_comm": {"canneal", "particlefilter", "streamcluster",
+                    "flash_attention", "decode_attention"},
     # MSHR saturation (sweep_mshr): only indexed-pattern apps are gated by
-    # the demand-miss file; unit-stride streams ride the prefetch window
+    # the demand-miss file; unit/strided streams ride the prefetch window
     "mshr_bound": {"canneal"},
 }
 

@@ -25,6 +25,11 @@ def _t(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
+# machine-readable results collected while the driver runs; main() writes
+# them to --bench-json (BENCH_pr3.json by default)
+_BENCH: dict = {}
+
+
 def table_3_to_9_characterization():
     from repro.core import characterize as ch
     rows = []
@@ -95,13 +100,14 @@ def sweep_mshr():
 
 
 def sweep_wallclock(quick: bool = False):
-    """The acceptance benchmark: full 24-config x 7-app paper sweep, batched
-    engine vs the sequential per-(app, config) seed path."""
+    """The acceptance benchmark: the full 24-config x 10-app sweep (7 RiVec
+    + 3 frontend-derived ML workloads), batched engine vs the sequential
+    per-(app, config) seed path."""
     from repro.core import engine as eng
     from repro.core import suite
     from repro.core import tracegen
     if quick:
-        apps, mvls, lanes = ["blackscholes", "jacobi-2d"], (8, 64), (1, 8)
+        apps, mvls, lanes = ["blackscholes", "ssd_scan"], (8, 64), (1, 8)
     else:
         apps, mvls, lanes = sorted(tracegen.APPS), (8, 16, 32, 64, 128, 256), (1, 2, 4, 8)
     n = len(apps) * len(mvls) * len(lanes)
@@ -115,6 +121,12 @@ def sweep_wallclock(quick: bool = False):
     worst = max(abs(batched[a][k] - seq[a][k]) / seq[a][k]
                 for a in apps for k in seq[a])
     label = "quick" if quick else "full"
+    _BENCH["sweep"] = {
+        "mode": label, "n_cells": n, "apps": list(apps),
+        "wall_s_batched": t_batched, "wall_s_sequential": t_seq,
+        "batched_speedup": t_seq / t_batched, "max_rel_diff": worst,
+        "jit_cache": eng.jit_cache_size(),
+    }
     return [
         (f"sweep_{label}_{n}cfg_batched", t_batched * 1e6,
          f"wall_s={t_batched:.2f}"),
@@ -124,6 +136,41 @@ def sweep_wallclock(quick: bool = False):
          f"{t_seq / t_batched:.1f}x|max_rel_diff={worst:.2e}"
          f"|jit_cache={eng.jit_cache_size()}"),
     ]
+
+
+def steady_state_table():
+    """Per-app steady-state loop-body times at the reference config — the
+    per-app entry of BENCH_pr3.json, one batched dispatch set."""
+    from repro.core import engine as eng
+    from repro.core import suite, tracegen
+    cfg = eng.VectorEngineConfig(mvl=64, lanes=4)
+    apps = sorted(tracegen.APPS)
+    bodies = [tracegen.body_for(a, suite.effective_mvl(a, cfg), cfg)
+              for a in apps]
+    t0 = time.perf_counter()
+    times = eng.steady_state_time_batch(bodies, [cfg] * len(apps))
+    us_each = (time.perf_counter() - t0) * 1e6 / len(apps)
+    _BENCH["steady_state_ns"] = {a: t for a, t in zip(apps, times)}
+    _BENCH["steady_state_config"] = cfg.label()
+    return [(f"steady_state_{a}_{cfg.label()}", us_each, f"{t:.1f}ns")
+            for a, t in zip(apps, times)]
+
+
+def frontend_crossval():
+    """Jaxpr-frontend cross-validation (derived vs hand-coded bodies): the
+    static mixes must match exactly, steady-state time within 5%."""
+    from repro.core import frontend as fe
+    t0 = time.perf_counter()
+    reports = fe.cross_validate_all()
+    us_each = (time.perf_counter() - t0) * 1e6 / len(reports)
+    _BENCH["frontend_crossval"] = {
+        "all_ok": all(r.ok for r in reports),
+        "worst_time_rel_err": max(r.time_rel_err for r in reports),
+        "apps": sorted({r.app for r in reports}),
+    }
+    return [(f"frontend_crossval_{r.app}", us_each,
+             f"time_err={r.time_rel_err:.4f}|{'ok' if r.ok else 'FAIL'}")
+            for r in reports]
 
 
 def kernel_microbench():
@@ -198,22 +245,32 @@ def main(argv=None) -> None:
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
-                    help="smoke mode: characterization + batched figures + a "
-                         "small batched-vs-sequential sweep; skips kernel "
-                         "microbenchmarks and the roofline table")
+                    help="smoke mode: characterization + batched figures + "
+                         "frontend cross-validation + a small batched-vs-"
+                         "sequential sweep; skips kernel microbenchmarks and "
+                         "the roofline table")
+    ap.add_argument("--bench-json", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_pr3.json"),
+        help="machine-readable results path (sweep wall-clock, batched "
+             "speedup, per-app steady-state times, crossval verdict)")
     args = ap.parse_args(argv)
     if args.quick:
         fns = (table_3_to_9_characterization, figures_4_to_10_scalability,
-               sweep_llc, sweep_mshr,
+               sweep_llc, sweep_mshr, frontend_crossval, steady_state_table,
                lambda: sweep_wallclock(quick=True))
     else:
         fns = (table_3_to_9_characterization, figures_4_to_10_scalability,
-               sweep_llc, sweep_mshr, kernel_microbench, roofline_table,
+               sweep_llc, sweep_mshr, frontend_crossval, steady_state_table,
+               kernel_microbench, roofline_table,
                lambda: sweep_wallclock(quick=False))
     print("name,us_per_call,derived")
     for fn in fns:
         for name, us, derived in fn():
             print(f"{name},{us:.1f},{derived}")
+    with open(args.bench_json, "w") as f:
+        json.dump(_BENCH, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {os.path.normpath(args.bench_json)}")
 
 
 if __name__ == "__main__":

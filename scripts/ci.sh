@@ -21,5 +21,10 @@ awk '/^```python/{if(!done){f=1};next} /^```/{if(f){f=0;done=1}} f' \
   README.md > "$snippet"
 python "$snippet"
 
+echo "== frontend cross-validation gate =="
+# derived (jaxpr-lowered) bodies vs hand-coded tracegen bodies: exact
+# kind/FU/pattern/element/scalar mixes, steady-state time within 5%
+python -m repro.core.frontend
+
 echo "== quick benchmark smoke =="
 python benchmarks/run.py --quick

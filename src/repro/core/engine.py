@@ -70,6 +70,22 @@ class VectorEngineConfig:
     scalar_ipc: float = 2.0
     dispatch_latency: float = 5.0  # scalar commit -> vector engine dispatch
 
+    def __post_init__(self):
+        """The scan's occupancy ring buffers are statically sized MAX_RING;
+        a capacity beyond that silently wraps and corrupts every timing
+        result, so reject it at construction."""
+        for name, cap in (("rob_entries", self.rob_entries),
+                          ("queue_entries", self.queue_entries),
+                          ("phys_regs - 32", self.phys_regs - 32)):
+            if cap > MAX_RING:
+                raise ValueError(
+                    f"{name}={cap} exceeds the engine ring capacity "
+                    f"MAX_RING={MAX_RING}; raise engine.MAX_RING to model it")
+        if self.phys_regs < 33:
+            raise ValueError(
+                f"phys_regs={self.phys_regs}: need >= 33 (32 architectural "
+                "+ at least one rename register)")
+
     def label(self) -> str:
         """Result key: ``mvl{m}_l{l}`` plus one suffix per knob that differs
         from the Table-10 defaults — derived from the dataclass fields, so
@@ -220,8 +236,11 @@ def _make_step(params):
             upd(last_aq, jnp.where(is_mem, last_aq, issue)),
             upd(last_mq, jnp.where(is_mem, issue, last_mq)),
             upd(last_commit, commit),
+            # vfirst/vpopc AND reductions deliver their result to the scalar
+            # core (vfred* + vfmv.f.s): a later dep_scalar block waits on it
             upd(scalar_res,
-                jnp.where(kind == isa.VMASK_SCALAR, complete, scalar_res)),
+                jnp.where((kind == isa.VMASK_SCALAR) | (kind == isa.VREDUCE),
+                          complete, scalar_res)),
             busy_lane + jnp.where(is_scalar | is_mem, 0.0, startup + exec_c),
             busy_vmu + jnp.where(is_mem, startup + exec_c, 0.0),
         )

@@ -1,0 +1,679 @@
+"""Jaxpr → vector-IR trace frontend: lower JAX kernel bodies to engine traces.
+
+The suite's second trace source.  The hand-coded bodies in
+``repro.core.tracegen`` describe each application's loop body as an explicit
+instruction list; this module derives the same ``isa.Trace`` mechanically
+from a *traced JAX function* — one MVL-chunk worth of the kernel's work —
+so any jax-expressible kernel becomes a simulatable benchmark:
+
+1. the chunk function is traced to a jaxpr (``jax.make_jaxpr``),
+2. every equation is mapped to vector IR (the table below),
+3. logical vector registers are assigned by live range (linear scan over
+   the 32-register file the engine scoreboard models),
+4. loads/stores come from declared :class:`Stream` block specs, carrying
+   the stream's ``footprint_kb`` and access pattern so the analytic memory
+   model (``repro.core.memory``) works unchanged.
+
+Primitive → IR mapping (``docs/architecture.md`` has the full table):
+
+=====================================  =====================================
+jaxpr primitive                        vector IR
+=====================================  =====================================
+add/sub/min/max/compare/select/...     ``VARITH`` @ ``FU_SIMPLE``
+mul / integer_pow / square             ``VARITH`` @ ``FU_MUL``
+div / sqrt / rsqrt / rem               ``VARITH`` @ ``FU_DIV``
+exp / log / erf / tanh / sin / ...     ``VARITH`` @ ``FU_TRANS``
+reduce_sum/max/min/prod                ``VREDUCE`` (result stays vector-
+                                       register resident, RVV ``vfred*``)
+reduce_or/and, argmax/argmin           ``VMASK_SCALAR`` (``vfirst``/``vpopc``
+                                       class: result goes to the scalar core)
+roll / concatenate / pad               ``VSLIDE`` (lane interconnect)
+cumsum/cumprod/cummax/cummin           ``ceil(log2(vl))`` × (``VSLIDE`` +
+                                       ``VARITH``) — the RVV prefix ladder
+gather (``x[idx]``)                    ``VLOAD`` @ ``MEM_INDEXED``
+declared :class:`Stream` in/outs       ``VLOAD``/``VSTORE`` with the
+                                       stream's pattern and footprint
+rank-0 equations                       coalesced ``SCALAR_BLOCK``; marked
+                                       ``dep_scalar`` when they consume a
+                                       vector-engine result (reduction /
+                                       mask / element extract)
+broadcast/reshape/convert/slice/...    free (register-view bookkeeping)
+=====================================  =====================================
+
+Constructs with no JAX-level analogue — whole-register spill moves and the
+``vfirst.m``/``vpopc.m`` mask round trips — are declared explicitly in the
+kernel spec (:class:`RawRecords`), and bulk scalar bookkeeping is declared
+as :class:`ScalarWork`; everything vectorizable is derived from the jaxpr.
+
+``cross_validate`` is the contract that keeps the two frontends honest: for
+every RiVec app carrying a ``kernel=`` spec, the derived body must match the
+hand-coded one exactly on instruction-kind mix, FU mix, memory-pattern mix,
+element counts and scalar work, stay within the register file, and agree on
+steady-state time within ``TIME_RTOL`` (5%).  ``python -m
+repro.core.frontend`` runs the gate (wired into ``scripts/ci.sh``).
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import isa
+
+try:  # the public home since jax 0.4.x; jax.core kept as fallback
+    from jax.extend.core import Literal as _Literal
+except Exception:  # pragma: no cover
+    from jax.core import Literal as _Literal
+
+
+class FrontendError(Exception):
+    """A kernel uses a primitive (or a value shape) the frontend can't map."""
+
+
+# --------------------------------------------------------------------------
+# primitive classification tables
+# --------------------------------------------------------------------------
+
+_S, _M, _D, _T = isa.FU_SIMPLE, isa.FU_MUL, isa.FU_DIV, isa.FU_TRANS
+
+FU_OF_PRIM = {
+    "add": _S, "add_any": _S, "sub": _S, "max": _S, "min": _S, "neg": _S,
+    "abs": _S, "and": _S, "or": _S, "xor": _S, "not": _S, "gt": _S, "lt": _S,
+    "ge": _S, "le": _S, "eq": _S, "ne": _S, "select_n": _S, "sign": _S,
+    "floor": _S, "ceil": _S, "round": _S, "clamp": _S, "is_finite": _S,
+    "shift_left": _S, "shift_right_logical": _S, "shift_right_arithmetic": _S,
+    "mul": _M, "integer_pow": _M, "square": _M,
+    "div": _D, "sqrt": _D, "rsqrt": _D, "rem": _D,
+    "exp": _T, "exp2": _T, "log": _T, "log2": _T, "log1p": _T, "expm1": _T,
+    "erf": _T, "erfc": _T, "erf_inv": _T, "sin": _T, "cos": _T, "tan": _T,
+    "asin": _T, "acos": _T, "atan": _T, "atan2": _T, "sinh": _T, "cosh": _T,
+    "tanh": _T, "logistic": _T, "pow": _T, "cbrt": _T,
+}
+
+REDUCE_FU = {"reduce_sum": _S, "reduce_max": _S, "reduce_min": _S,
+             "reduce_prod": _M}
+
+MASK_PRIMS = ("reduce_or", "reduce_and", "argmax", "argmin")
+
+CUMULATIVE_FU = {"cumsum": _S, "cummax": _S, "cummin": _S, "cumprod": _M,
+                 "cumlogsumexp": _T}
+
+SLIDE_PRIMS = ("concatenate", "pad", "rev")
+
+# register-view / layout bookkeeping: free at the IR level
+SKIP_PRIMS = ("convert_element_type", "broadcast_in_dim", "reshape",
+              "squeeze", "expand_dims", "slice", "transpose", "iota",
+              "stop_gradient", "copy", "device_put", "bitcast_convert_type")
+
+CALL_PRIMS = ("pjit", "closed_call", "core_call", "custom_jvp_call",
+              "custom_vjp_call", "remat", "checkpoint")
+
+N_LOGICAL_REGS = 32   # the engine's register-ready scoreboard size
+TIME_RTOL = 0.05      # cross-validation steady-state-time tolerance
+
+
+# --------------------------------------------------------------------------
+# kernel specs: streams + segments
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Stream:
+    """A declared memory stream (the frontend's block spec): name, working-set
+    footprint between reuses (KB, feeds the analytic memory model), and
+    access pattern."""
+    name: str
+    footprint_kb: float
+    pattern: int = isa.MEM_UNIT
+
+
+@dataclass(frozen=True)
+class KernelBody:
+    """A traced-JAX segment of a chunk: ``fn`` is traced at vector length
+    ``vl``; ``ins`` are :class:`Stream` block specs (lowered to ``VLOAD``)
+    or names of values produced by earlier segments; ``outs`` pair the fn's
+    return values with :class:`Stream` specs (lowered to ``VSTORE``), names
+    (kept live for later segments), or ``None`` (dropped).
+
+    ``lazy_loads=False`` fetches every declared block up front (Pallas
+    block-spec semantics); ``True`` issues each load at first use (RVV
+    streaming codegen) — required when a segment declares more streams than
+    the register file holds."""
+    fn: Callable
+    vl: int
+    ins: tuple = ()
+    outs: tuple = ()
+    lazy_loads: bool = False
+
+
+@dataclass(frozen=True)
+class ScalarWork:
+    """Declared scalar-core bookkeeping (loop/addressing overhead): the
+    per-chunk instruction counts come from the app characterization, not
+    from the jaxpr."""
+    count: float
+    fu: int = isa.FU_SIMPLE
+    dep_scalar: bool = False
+
+
+@dataclass(frozen=True)
+class RawRecords:
+    """Escape hatch for IR constructs with no JAX analogue (spill moves,
+    ``vfirst``/``vpopc`` mask round trips): explicit record dicts."""
+    records: tuple
+
+
+# --------------------------------------------------------------------------
+# the characterized arithmetic chain (shared sequence with tracegen)
+# --------------------------------------------------------------------------
+
+def chain_ops(n: int, mix: dict, seeds=(1.0,), vl: int = 8,
+              window: int = 16) -> list:
+    """Apply ``n`` arithmetic ops in the canonical characterized sequence
+    (``isa.fu_sequence`` — the same FU mix and shuffle the hand-coded bodies
+    use) over a rotating dependency window of jnp values; returns the final
+    window.
+
+    Float seeds become dependency-free immediates (splats), mirroring the
+    hand-coded bodies' constant-ready rotating registers; jnp-array seeds
+    (e.g. loaded stream values) create real operand dependencies.
+    """
+    vals = [jnp.full((vl,), float(s), jnp.float32)
+            if isinstance(s, (int, float)) else s for s in seeds]
+    if not vals:
+        raise FrontendError("chain_ops needs at least one seed")
+    win = [vals[i % len(vals)] for i in range(window)]
+    extra = list(vals[window:])
+    for i, cls in enumerate(isa.fu_sequence(n, mix)):
+        a = win[(i + 5) % window]
+        b = extra.pop(0) if (extra and cls != isa.FU_TRANS) \
+            else win[(i + 11) % window]
+        if cls == isa.FU_SIMPLE:
+            r = a + b
+        elif cls == isa.FU_MUL:
+            r = a * b
+        elif cls == isa.FU_DIV:
+            r = a / b
+        else:
+            r = jnp.exp(a)
+        win[i % window] = r
+    return win
+
+
+# --------------------------------------------------------------------------
+# phase 1: walk segments/jaxprs into a linear vop list
+# --------------------------------------------------------------------------
+
+@dataclass
+class _Val:
+    """Abstract value during the walk: a vector register candidate ('vec',
+    with a token), a scalar-core value ('sca'), or an immediate ('imm').
+    ``hot`` marks scalar values produced by the vector engine — their scalar
+    consumers become ``dep_scalar`` blocks."""
+    kind: str
+    tok: int = -1
+    hot: bool = False
+
+
+_IMM = _Val("imm")
+
+
+class _Walker:
+    def __init__(self):
+        self.ops: list[dict] = []
+        self.n_tok = 0
+        self.env: dict[str, int] = {}
+        self.stream_of_tok: dict[int, Stream] = {}
+        self._pending = None           # coalescing SCALAR_BLOCK
+        self._lazy: dict[int, dict] = {}
+
+    def tok(self) -> int:
+        self.n_tok += 1
+        return self.n_tok - 1
+
+    # -- record emission ----------------------------------------------------
+    def _flush(self):
+        if self._pending is not None:
+            self.ops.append(self._pending)
+            self._pending = None
+
+    def scalar_eqn(self, dep: bool):
+        if self._pending is None:
+            self._pending = {"op": "scalar", "count": 0, "fu": isa.FU_SIMPLE,
+                             "dep": False}
+        self._pending["count"] += 1
+        self._pending["dep"] |= dep
+
+    def emit(self, op: dict):
+        """Append a vector op (flushing any pending scalar block first)."""
+        self._flush()
+        self.ops.append(op)
+
+    def use(self, val: _Val) -> int:
+        """Resolve a vec value to its token, materializing a lazy load."""
+        pend = self._lazy.pop(val.tok, None)
+        if pend is not None:
+            self.emit(pend)
+        return val.tok
+
+    # -- jaxpr walk ---------------------------------------------------------
+    def walk(self, jaxpr, valmap: dict, vl: int):
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            if name in CALL_PRIMS:
+                self._walk_call(eqn, valmap, vl)
+                continue
+            invals = [self._resolve(v, valmap) for v in eqn.invars]
+            out = eqn.outvars[0]
+            oshape = getattr(out.aval, "shape", ())
+            onelem = int(np.prod(oshape)) if oshape else 1
+            vecs = [v for v in invals if v.kind == "vec"]
+
+            if name in SKIP_PRIMS:
+                valmap[out] = self._skip_val(invals, oshape)
+            elif name in CUMULATIVE_FU:
+                valmap[out] = self._cumulative(name, invals, onelem)
+            elif name in REDUCE_FU:
+                in_elems = int(np.prod(eqn.invars[0].aval.shape))
+                t = self.tok()
+                self.emit({"op": "reduce", "vl": in_elems,
+                           "fu": REDUCE_FU[name],
+                           "src": self.use(vecs[0]) if vecs else None,
+                           "out": t})
+                # result stays vector-register resident (RVV vfred*) but is
+                # hot: a scalar consumer needs the engine's scalar result
+                valmap[out] = _Val("vec", t, hot=True)
+                for ov in eqn.outvars[1:]:
+                    valmap[ov] = _Val("sca", hot=True)
+            elif name in MASK_PRIMS:
+                in_elems = int(np.prod(eqn.invars[0].aval.shape))
+                self.emit({"op": "mask", "vl": in_elems,
+                           "src": self.use(vecs[0]) if vecs else None})
+                for ov in eqn.outvars:
+                    valmap[ov] = _Val("sca", hot=True)
+            elif name == "gather":
+                stream = self.stream_of_tok.get(
+                    invals[0].tok if invals[0].kind == "vec" else -1)
+                fp = stream.footprint_kb if stream else 64.0
+                idx = invals[1] if len(invals) > 1 else _IMM
+                t = self.tok()
+                self.emit({"op": "load", "vl": onelem, "out": t,
+                           "stream": Stream("gather", fp, isa.MEM_INDEXED),
+                           "idx": self.use(idx) if idx.kind == "vec" else None})
+                valmap[out] = _Val("vec", t)
+            elif name in SLIDE_PRIMS:
+                t = self.tok()
+                self.emit({"op": "slide", "vl": onelem,
+                           "src": self.use(vecs[0]) if vecs else None,
+                           "out": t})
+                valmap[out] = _Val("vec", t)
+            elif name in FU_OF_PRIM:
+                if not oshape:  # rank-0: runs on the scalar core
+                    dep = any(v.hot or v.kind == "vec" for v in invals)
+                    self.scalar_eqn(dep)
+                    valmap[out] = _Val("sca", hot=dep)
+                else:
+                    t = self.tok()
+                    srcs = [self.use(v) for v in vecs]
+                    self.emit({"op": "arith", "vl": onelem,
+                               "fu": FU_OF_PRIM[name], "srcs": srcs,
+                               "out": t, "n_src": len(srcs)})
+                    valmap[out] = _Val("vec", t)
+            else:
+                raise FrontendError(
+                    f"no vector-IR mapping for primitive {name!r} "
+                    f"(see frontend.FU_OF_PRIM and friends)")
+
+    def _resolve(self, v, valmap) -> _Val:
+        if isinstance(v, _Literal):
+            return _IMM
+        try:
+            return valmap[v]
+        except KeyError:
+            raise FrontendError(f"unbound jaxpr variable {v}") from None
+
+    def _skip_val(self, invals, oshape) -> _Val:
+        vecs = [v for v in invals if v.kind == "vec"]
+        if vecs and not oshape:
+            # element extract (vector -> scalar): a vfmv.f.s-class transfer
+            return _Val("sca", hot=True)
+        if vecs:
+            return vecs[0]           # register view, aliases the operand
+        if any(v.kind == "sca" for v in invals):
+            return _Val("sca", hot=any(v.hot for v in invals))
+        return _IMM
+
+    def _cumulative(self, name, invals, nelem) -> _Val:
+        """RVV prefix ladder: ceil(log2(vl)) rounds of slide + op."""
+        cur = invals[0]
+        rounds = max(1, int(math.ceil(math.log2(max(nelem, 2)))))
+        for _ in range(rounds):
+            ts = self.tok()
+            self.emit({"op": "slide", "vl": nelem,
+                       "src": self.use(cur) if cur.kind == "vec" else None,
+                       "out": ts})
+            ta = self.tok()
+            srcs = ([self.use(cur)] if cur.kind == "vec" else []) + [ts]
+            self.emit({"op": "arith", "vl": nelem, "fu": CUMULATIVE_FU[name],
+                       "srcs": srcs, "out": ta, "n_src": len(srcs)})
+            cur = _Val("vec", ta)
+        return cur
+
+    def _walk_call(self, eqn, valmap, vl):
+        p = eqn.params
+        inner = next((p[k] for k in ("jaxpr", "call_jaxpr", "fun_jaxpr")
+                      if k in p), None)
+        if inner is None:
+            raise FrontendError(
+                f"call primitive {eqn.primitive.name!r} without inner jaxpr")
+        ijaxpr = inner.jaxpr if hasattr(inner, "jaxpr") else inner
+        sub: dict = {}
+        for cv in ijaxpr.constvars:
+            sub[cv] = _IMM
+        for iv, ov in zip(ijaxpr.invars, eqn.invars):
+            sub[iv] = self._resolve(ov, valmap)
+        self.walk(ijaxpr, sub, vl)
+        for outer, innerv in zip(eqn.outvars, ijaxpr.outvars):
+            valmap[outer] = self._resolve(innerv, sub)
+
+    # -- segments -----------------------------------------------------------
+    def segment(self, seg):
+        if isinstance(seg, ScalarWork):
+            self._flush()
+            self.ops.append({"op": "scalar", "count": seg.count, "fu": seg.fu,
+                             "dep": seg.dep_scalar})
+        elif isinstance(seg, RawRecords):
+            self._flush()
+            for rec in seg.records:
+                self.ops.append({"op": "raw", "rec": dict(rec)})
+        elif isinstance(seg, KernelBody):
+            self._kernel_body(seg)
+        else:
+            raise FrontendError(f"unknown segment type {type(seg).__name__}")
+
+    def _kernel_body(self, seg: KernelBody):
+        vals = []
+        for s in seg.ins:
+            if isinstance(s, Stream):
+                t = self.tok()
+                self.stream_of_tok[t] = s
+                op = {"op": "load", "vl": seg.vl, "stream": s, "out": t,
+                      "idx": None}
+                if seg.lazy_loads:
+                    self._lazy[t] = op
+                else:
+                    self.emit(op)
+                vals.append(_Val("vec", t))
+            else:
+                if s not in self.env:
+                    raise FrontendError(f"segment input {s!r} not produced "
+                                        "by an earlier segment")
+                vals.append(_Val("vec", self.env[s]))
+        avals = [jax.ShapeDtypeStruct((seg.vl,), jnp.float32) for _ in vals]
+        closed = jax.make_jaxpr(seg.fn)(*avals)
+        valmap = dict(zip(closed.jaxpr.invars, vals))
+        for cv in closed.jaxpr.constvars:
+            valmap[cv] = _IMM
+        self.walk(closed.jaxpr, valmap, seg.vl)
+        outvals = [self._resolve(v, valmap) for v in closed.jaxpr.outvars]
+        # any block not yet fetched is still loaded (block-spec semantics)
+        for t in list(self._lazy):
+            self.emit(self._lazy.pop(t))
+        if seg.outs and len(seg.outs) > len(outvals):
+            raise FrontendError(
+                f"{len(seg.outs)} outs declared, fn returned {len(outvals)}")
+        for spec, val in zip(seg.outs, outvals):
+            if spec is None:
+                continue
+            if isinstance(spec, Stream):
+                if val.kind != "vec":
+                    raise FrontendError(
+                        f"store {spec.name!r} needs a vector value")
+                elems = next((o.get("vl") for o in reversed(self.ops)
+                              if o.get("out") == val.tok), seg.vl)
+                self.emit({"op": "store", "vl": elems, "stream": spec,
+                           "src": self.use(val)})
+            else:
+                if val.kind != "vec":
+                    raise FrontendError(
+                        f"named out {spec!r} needs a vector value")
+                self.env[spec] = val.tok
+        self._flush()
+
+
+# --------------------------------------------------------------------------
+# phase 2: live-range register allocation + record emission
+# --------------------------------------------------------------------------
+
+def _op_uses(op: dict) -> list[int]:
+    if op["op"] == "arith":
+        return list(op["srcs"])
+    if op["op"] in ("slide", "reduce", "mask"):
+        return [op["src"]] if op["src"] is not None else []
+    if op["op"] == "load":
+        return [op["idx"]] if op.get("idx") is not None else []
+    if op["op"] == "store":
+        return [op["src"]]
+    return []
+
+
+@dataclass
+class Lowered:
+    """A lowered chunk: the trace plus the allocator's pressure figures."""
+    trace: isa.Trace
+    max_live: int        # peak simultaneously-live logical registers
+    regs_used: int       # distinct registers touched (cf. isa.trace_registers)
+
+
+def lower(segments, n_regs: int = N_LOGICAL_REGS) -> Lowered:
+    """Lower a kernel spec (list of segments) to a trace.
+
+    Registers are assigned by live range: a linear scan over the vop list
+    allocates the lowest free register at each definition and frees it after
+    the value's last use; exceeding ``n_regs`` simultaneously-live values is
+    a :class:`FrontendError` (the spec must spill explicitly, as canneal's
+    ``RawRecords`` moves do).
+    """
+    w = _Walker()
+    for seg in segments:
+        w.segment(seg)
+    w._flush()
+    ops = w.ops
+
+    last: dict[int, int] = {}
+    for i, op in enumerate(ops):
+        for t in _op_uses(op):
+            last[t] = i
+
+    free = list(range(n_regs))
+    heapq.heapify(free)
+    reg: dict[int, int] = {}
+    max_live = 0
+    used: set[int] = set()
+    b = isa.TraceBuilder()
+    for i, op in enumerate(ops):
+        sregs = []
+        for t in _op_uses(op):
+            if t not in reg:
+                raise FrontendError("value used before definition")
+            sregs.append(reg[t])
+        for t in set(_op_uses(op)):
+            if last[t] == i:
+                heapq.heappush(free, reg.pop(t))
+        dreg = -1
+        t = op.get("out")
+        if t is not None:
+            if not free:
+                raise FrontendError(
+                    f"register pressure exceeds {n_regs} logical registers")
+            dreg = heapq.heappop(free)
+            reg[t] = dreg
+            used.add(dreg)
+            max_live = max(max_live, n_regs - len(free))
+            if last.get(t, -1) <= i:        # dead value: reg recycles
+                heapq.heappush(free, reg.pop(t))
+        _emit_record(b, op, sregs, dreg)
+    return Lowered(b.build(), max_live, len(used))
+
+
+def _emit_record(b: isa.TraceBuilder, op: dict, sregs: list, dreg: int):
+    kind = op["op"]
+    if kind == "scalar":
+        b.scalar(op["count"], fu=op["fu"], dep_scalar=op["dep"])
+    elif kind == "raw":
+        b.raw(op["rec"])
+    elif kind == "load":
+        s = op["stream"]
+        rec = isa.vload(op["vl"], dst=dreg, pattern=s.pattern,
+                        footprint_kb=s.footprint_kb)
+        if sregs:                            # gather: consumes an index vector
+            rec.update(n_src=1, src1=sregs[0])
+        b.raw(rec)
+    elif kind == "store":
+        s = op["stream"]
+        b.store(op["vl"], src1=sregs[0], pattern=s.pattern,
+                footprint_kb=s.footprint_kb)
+    elif kind == "arith":
+        b.arith(op["vl"], fu=op["fu"], n_src=op["n_src"],
+                src1=sregs[0] if sregs else -1,
+                src2=sregs[1] if len(sregs) > 1 else -1, dst=dreg)
+    elif kind == "slide":
+        b.slide(op["vl"], src1=sregs[0] if sregs else -1, dst=dreg)
+    elif kind == "reduce":
+        b.reduce(op["vl"], src1=sregs[0] if sregs else -1, dst=dreg,
+                 fu=op["fu"])
+    elif kind == "mask":
+        b.mask_to_scalar(op["vl"], src1=sregs[0] if sregs else -1)
+    else:  # pragma: no cover
+        raise FrontendError(f"unknown vop {kind!r}")
+
+
+def lower_trace(segments, n_regs: int = N_LOGICAL_REGS) -> isa.Trace:
+    return lower(segments, n_regs=n_regs).trace
+
+
+# --------------------------------------------------------------------------
+# derived bodies + cross-validation against the hand-coded frontend
+# --------------------------------------------------------------------------
+
+_DERIVED_CACHE: dict = {}
+
+
+def derived_body(app_name: str, mvl: int, cfg=None) -> Lowered:
+    """Lower ``APPS[app_name].kernel(mvl, cfg)`` (cached, like body_for)."""
+    from repro.core import tracegen
+    key = (app_name, mvl, cfg)
+    out = _DERIVED_CACHE.get(key)
+    if out is None:
+        spec = tracegen.APPS[app_name].kernel
+        if spec is None:
+            raise FrontendError(f"{app_name} has no kernel= spec")
+        out = _DERIVED_CACHE[key] = lower(spec(mvl, cfg))
+    return out
+
+
+def trace_mix(trace: isa.Trace) -> dict:
+    """FU-class fractions of a trace's VARITH instructions (an App.mix)."""
+    fus = trace.fu[trace.kind == isa.VARITH]
+    n = max(len(fus), 1)
+    names = {_S: "simple", _M: "mul", _D: "div", _T: "trans"}
+    return {names[c]: float(np.sum(fus == c)) / n for c in names}
+
+
+@dataclass
+class CrossValReport:
+    app: str
+    kinds_ok: bool       # instruction-kind histogram: exact
+    fu_ok: bool          # FU histogram over VARITH: exact
+    pattern_ok: bool     # memory-pattern histogram over loads/stores: exact
+    elems_ok: bool       # summed vector length (element work): exact
+    scalar_ok: bool      # total scalar_count and dep_scalar count: exact
+    pressure_ok: bool    # fits the register file, close to hand-coded
+    hand_regs: int
+    derived_regs: int
+    time_hand: float = 0.0
+    time_derived: float = 0.0
+
+    @property
+    def time_rel_err(self) -> float:
+        return abs(self.time_derived - self.time_hand) / max(self.time_hand,
+                                                             1e-9)
+
+    @property
+    def ok(self) -> bool:
+        return (self.kinds_ok and self.fu_ok and self.pattern_ok
+                and self.elems_ok and self.scalar_ok and self.pressure_ok
+                and self.time_rel_err <= TIME_RTOL)
+
+
+def _static_report(app_name: str, hand: isa.Trace, low: Lowered) -> CrossValReport:
+    d = low.trace
+    vmask = lambda t: t.kind != isa.SCALAR_BLOCK
+    memmask = lambda t: (t.kind == isa.VLOAD) | (t.kind == isa.VSTORE)
+    kinds_ok = bool(np.array_equal(isa.kind_histogram(hand),
+                                   isa.kind_histogram(d)))
+    fu_ok = bool(np.array_equal(
+        np.bincount(hand.fu[hand.kind == isa.VARITH], minlength=4),
+        np.bincount(d.fu[d.kind == isa.VARITH], minlength=4)))
+    pattern_ok = bool(np.array_equal(
+        np.bincount(hand.mem_pattern[memmask(hand)], minlength=3),
+        np.bincount(d.mem_pattern[memmask(d)], minlength=3)))
+    elems_ok = int(hand.vl[vmask(hand)].sum()) == int(d.vl[vmask(d)].sum())
+    scalar_ok = (int(hand.scalar_count.sum()) == int(d.scalar_count.sum())
+                 and int(hand.dep_scalar.sum()) == int(d.dep_scalar.sum()))
+    hand_regs = isa.trace_registers(hand)
+    pressure_ok = (low.max_live <= N_LOGICAL_REGS
+                   and abs(low.regs_used - hand_regs) <= 16)
+    return CrossValReport(app_name, kinds_ok, fu_ok, pattern_ok, elems_ok,
+                          scalar_ok, pressure_ok, hand_regs, low.regs_used)
+
+
+def cross_validate_all(apps=None, cfgs=None) -> list[CrossValReport]:
+    """Derived-vs-hand-coded contract for every app with both frontends;
+    the timing comparison for every (app, cfg) pair runs as one batch."""
+    from repro.core import engine as eng
+    from repro.core import suite, tracegen
+    if apps is None:
+        apps = list(tracegen.RIVEC_APPS)
+    if cfgs is None:
+        cfgs = [eng.VectorEngineConfig(mvl=64, lanes=4),
+                eng.VectorEngineConfig(mvl=16, lanes=2)]
+    reports, bodies, pair_cfgs = [], [], []
+    for cfg in cfgs:
+        for app in apps:
+            eff = suite.effective_mvl(app, cfg)
+            hand = tracegen.body_for(app, eff, cfg)
+            low = derived_body(app, eff, cfg)
+            reports.append(_static_report(app, hand, low))
+            bodies += [hand, low.trace]
+            pair_cfgs += [cfg, cfg]
+    times = eng.steady_state_time_batch(bodies, pair_cfgs)
+    for r, i in zip(reports, range(0, len(times), 2)):
+        r.time_hand, r.time_derived = times[i], times[i + 1]
+    return reports
+
+
+def main(argv=None) -> int:
+    reports = cross_validate_all()
+    print(f"{'app':16s} {'kinds':>6s} {'fu':>4s} {'mem':>4s} {'elems':>6s} "
+          f"{'scalar':>7s} {'regs h/d':>9s} {'time err':>9s}  ok")
+    ok = True
+    for r in reports:
+        ok &= r.ok
+        print(f"{r.app:16s} {str(r.kinds_ok):>6s} {str(r.fu_ok):>4s} "
+              f"{str(r.pattern_ok):>4s} {str(r.elems_ok):>6s} "
+              f"{str(r.scalar_ok):>7s} {r.hand_regs:4d}/{r.derived_regs:<4d} "
+              f"{r.time_rel_err:8.2%}  {'ok' if r.ok else 'FAIL'}")
+    print("\nfrontend cross-validation:", "CONSISTENT" if ok else "MISMATCH")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    # delegate to the canonical module object: specs built by tracegen carry
+    # repro.core.frontend segment classes, not __main__ ones
+    from repro.core import frontend as _canonical
+    raise SystemExit(_canonical.main())

@@ -130,6 +130,133 @@ def stack_traces(traces: list["Trace"], length: int | None = None) -> Trace:
                     for k in Trace.__dataclass_fields__})
 
 
+def mix_counts(n: int, mix: dict) -> dict:
+    """Split n arithmetic instructions into FU classes by an app mix.
+
+    The rounding residue lands on FU_SIMPLE, so the counts always sum to n.
+    """
+    out = {}
+    acc = 0
+    classes = [FU_SIMPLE, FU_MUL, FU_DIV, FU_TRANS]
+    fracs = [mix.get(c, 0.0) for c in ("simple", "mul", "div", "trans")]
+    for cls, f in zip(classes, fracs):
+        k = int(round(n * f))
+        out[cls] = k
+        acc += k
+    out[FU_SIMPLE] += n - acc
+    return out
+
+
+def fu_sequence(n: int, mix: dict) -> list:
+    """The canonical shuffled FU-class sequence for n arithmetic instructions.
+
+    Both trace frontends draw from this one generator — the hand-coded
+    ``tracegen`` bodies and the jaxpr frontend's ``chain_ops`` — so a derived
+    body's FU histogram matches the hand-coded one exactly by construction.
+    """
+    cm = mix_counts(n, mix)
+    seq = []
+    for cls, k in cm.items():
+        seq += [cls] * k
+    rng = np.random.RandomState(0)
+    rng.shuffle(seq)
+    return seq
+
+
+class TraceBuilder:
+    """Incremental builder for instruction traces.
+
+    The shared construction API of both trace frontends: the hand-coded
+    ``tracegen`` loop bodies append records through it, and the jaxpr
+    frontend (``repro.core.frontend``) emits its lowered instructions through
+    the same methods — so the two paths cannot diverge on record layout.
+    Methods return ``self`` for chaining; ``build()`` finalizes a ``Trace``.
+    """
+
+    def __init__(self):
+        self._recs: list[dict] = []
+
+    def __len__(self) -> int:
+        return len(self._recs)
+
+    @property
+    def records(self) -> list[dict]:
+        return self._recs
+
+    def scalar(self, count, fu: int = FU_SIMPLE,
+               dep_scalar: bool = False) -> "TraceBuilder":
+        self._recs.append(scalar_block(count, fu=fu, dep_scalar=dep_scalar))
+        return self
+
+    def arith(self, vl, fu=FU_SIMPLE, n_src=2, src1=0, src2=1,
+              dst=2) -> "TraceBuilder":
+        self._recs.append(varith(vl, fu=fu, n_src=n_src, src1=src1,
+                                 src2=src2, dst=dst))
+        return self
+
+    def arith_chain(self, n, mix, vl, start_reg: int = 4,
+                    window: int = 16) -> "TraceBuilder":
+        """n arith instructions with a rotating register dependency window —
+        the hand-coded frontends' equivalent of ``frontend.chain_ops``."""
+        for i, cls in enumerate(fu_sequence(n, mix)):
+            self.arith(vl, fu=cls,
+                       src1=start_reg + ((i + 5) % window),
+                       src2=start_reg + ((i + 11) % window),
+                       dst=start_reg + (i % window))
+        return self
+
+    def load(self, vl, dst=0, pattern=MEM_UNIT,
+             footprint_kb=64.0) -> "TraceBuilder":
+        self._recs.append(vload(vl, dst=dst, pattern=pattern,
+                                footprint_kb=footprint_kb))
+        return self
+
+    def store(self, vl, src1=0, pattern=MEM_UNIT,
+              footprint_kb=64.0) -> "TraceBuilder":
+        self._recs.append(vstore(vl, src1=src1, pattern=pattern,
+                                 footprint_kb=footprint_kb))
+        return self
+
+    def slide(self, vl, src1=0, dst=1) -> "TraceBuilder":
+        self._recs.append(vslide(vl, src1=src1, dst=dst))
+        return self
+
+    def reduce(self, vl, src1=0, dst=1, fu=FU_SIMPLE) -> "TraceBuilder":
+        self._recs.append(vreduce(vl, src1=src1, dst=dst, fu=fu))
+        return self
+
+    def mask_to_scalar(self, vl, src1=0) -> "TraceBuilder":
+        self._recs.append(vmask_scalar(vl, src1=src1))
+        return self
+
+    def move(self, vl, src1=0, dst=1) -> "TraceBuilder":
+        self._recs.append(vmove(vl, src1=src1, dst=dst))
+        return self
+
+    def raw(self, rec: dict) -> "TraceBuilder":
+        self._recs.append(dict(rec))
+        return self
+
+    def extend(self, recs) -> "TraceBuilder":
+        self._recs.extend(recs)
+        return self
+
+    def build(self) -> Trace:
+        return Trace.from_records(self._recs)
+
+
+def trace_registers(trace: Trace) -> int:
+    """Number of distinct logical vector registers a trace touches — the
+    register-pressure figure the cross-validation contract compares."""
+    regs = np.concatenate([trace.src1, trace.src2, trace.dst])
+    return int(np.unique(regs[regs >= 0]).size)
+
+
+def kind_histogram(trace: Trace) -> np.ndarray:
+    """Instruction-kind histogram (len 9, indexed by the KIND constants)."""
+    return np.bincount(trace.kind, minlength=NOP + 1)
+
+
 def scalar_block(count: int, fu: int = FU_SIMPLE, dep_scalar: bool = False) -> dict:
     return dict(kind=SCALAR_BLOCK, scalar_count=int(round(count)), fu=fu,
                 dep_scalar=dep_scalar)

@@ -23,12 +23,13 @@ import math
 from dataclasses import dataclass, field
 from typing import Callable
 
-import numpy as np
-
+from repro.core import frontend as fe
 from repro.core import isa
 from repro.core.isa import (FU_DIV, FU_MUL, FU_SIMPLE, FU_TRANS, MEM_INDEXED,
                             MEM_UNIT, Trace, scalar_block, varith, vload,
                             vmask_scalar, vmove, vreduce, vslide, vstore)
+
+import jax.numpy as jnp
 
 
 @dataclass
@@ -60,38 +61,18 @@ class App:
     init_scalar: float = 0.0                 # non-ROI init instructions
     max_vl: int = 10 ** 9                    # app's largest requested VL
     notes: str = ""
-
-
-def _mix_counts(n, mix):
-    """Split n arithmetic instructions into FU classes by the app mix."""
-    out = {}
-    acc = 0
-    classes = [FU_SIMPLE, FU_MUL, FU_DIV, FU_TRANS]
-    fracs = [mix.get(c, 0.0) for c in ("simple", "mul", "div", "trans")]
-    for cls, f in zip(classes, fracs):
-        k = int(round(n * f))
-        out[cls] = k
-        acc += k
-    out[FU_SIMPLE] += n - acc
-    return out
+    # jaxpr-frontend chunk spec: (mvl, cfg) -> list of frontend segments.
+    # For the RiVec apps it is cross-validated against `body` (same kind/FU/
+    # pattern mix, same element and scalar work, steady-state time within
+    # frontend.TIME_RTOL); for frontend-only workloads it IS the body.
+    kernel: Callable[[int, "object"], list] = None
 
 
 def _arith_seq(n, mix, vl, start_reg=4):
-    """n vector arith instructions with a rotating register dependency chain."""
-    recs = []
-    cm = _mix_counts(n, mix)
-    seq = []
-    for cls, k in cm.items():
-        seq += [cls] * k
-    rng = np.random.RandomState(0)
-    rng.shuffle(seq)
-    r = start_reg
-    for i, cls in enumerate(seq):
-        dst = start_reg + (i % 16)
-        s1 = start_reg + ((i + 5) % 16)
-        s2 = start_reg + ((i + 11) % 16)
-        recs.append(varith(vl, fu=cls, src1=s1, src2=s2, dst=dst))
-    return recs
+    """n vector arith instructions with a rotating register dependency chain
+    (the canonical ``isa.fu_sequence`` order, shared with the jaxpr
+    frontend's ``chain_ops``)."""
+    return isa.TraceBuilder().arith_chain(n, mix, vl, start_reg).records
 
 
 # ===========================================================================
@@ -140,6 +121,21 @@ def _bs_body(mvl, cfg):
     return Trace.from_records(recs)
 
 
+def _bs_kernel(mvl, cfg):
+    """Jaxpr-frontend spec: 22 option streams in, the characterized 269-op
+    pricing chain, 5 result streams out."""
+    vl = min(mvl, cfg.mvl) if cfg else mvl
+    ins = tuple(fe.Stream(f"opt{i}", _BS_FOOTPRINT_KB)
+                for i in range(_BS_MEM_PER - 5))
+    outs = tuple(fe.Stream(f"price{i}", _BS_FOOTPRINT_KB) for i in range(5))
+
+    def fn(*streams):
+        win = fe.chain_ops(_BS_ARITH_PER, _BS_MIX, seeds=(1.0, 2.0), vl=vl)
+        return tuple(win[:5])
+
+    return [fe.ScalarWork(_BS_S1), fe.KernelBody(fn, vl, ins=ins, outs=outs)]
+
+
 # ===========================================================================
 # Jacobi-2D (Table 5).  PolyBench large, 4,000 iterations.
 #   chunks@8 = 13,056,000 (65,280,000 mem / 5 per chunk)
@@ -185,6 +181,26 @@ def _j2_body(mvl, cfg):
     return Trace.from_records(recs)
 
 
+def _j2_kernel(mvl, cfg):
+    """Jaxpr-frontend spec: the rolls lower to VSLIDEs, the stencil update to
+    the characterized 20-op chain."""
+    vl = min(mvl, cfg.mvl) if cfg else mvl
+    ins = tuple(fe.Stream(f"grid{i}", _J2_GRID_KB) for i in range(4))
+
+    def fn(a, b, c, d):
+        up = jnp.roll(a, 1)
+        down = jnp.roll(a, -1)
+        win = fe.chain_ops(20, _J2_MIX, seeds=(0.2,), vl=vl)
+        s1 = jnp.roll(win[0], 1)
+        s2 = jnp.roll(win[1], 1)   # noqa: F841 boundary-fixup slides: traced
+        s3 = jnp.roll(win[2], 1)   # noqa: F841 (and timed) though unstored
+        return s1
+
+    return [fe.ScalarWork(_J2_S1),
+            fe.KernelBody(fn, vl, ins=ins,
+                          outs=(fe.Stream("grid_out", _J2_GRID_KB),))]
+
+
 # ===========================================================================
 # Particle Filter (Table 6).  vfirst/vpopc mask ops -> scalar-core stalls.
 #   arith instr fit: A/mvl + a0, A = 12,359,078,569, a0 = 657,519
@@ -228,6 +244,31 @@ def _pf_body(mvl, cfg):
         recs.append(vmask_scalar(vl, src1=6))
         recs.append(scalar_block(84, dep_scalar=True))
     return Trace.from_records(recs)
+
+
+def _pf_kernel(mvl, cfg):
+    """Jaxpr-frontend spec: the Box-Muller/motion chain from the jaxpr; the
+    vfirst/vpopc round trips of the guess update are declared RawRecords
+    (no JAX analogue) followed by the dependent scalar decision."""
+    vl = min(mvl, cfg.mvl) if cfg else mvl
+
+    def motion(state):
+        fe.chain_ops(760, _PF_MIX, seeds=(0.5,), vl=vl)
+        return state
+
+    def search(i):
+        def fn():
+            return fe.chain_ops(11, {"simple": 1.0}, seeds=(0.5,), vl=vl)[0]
+        return fn
+
+    segs = [fe.KernelBody(motion, vl,
+                          ins=(fe.Stream("particles", _PF_STATE_KB),))]
+    for i in range(16):
+        segs.append(fe.KernelBody(search(i), vl))
+        segs.append(fe.RawRecords((vmask_scalar(vl, src1=5),
+                                   vmask_scalar(vl, src1=6))))
+        segs.append(fe.ScalarWork(84, dep_scalar=True))
+    return segs
 
 
 # ===========================================================================
@@ -280,6 +321,37 @@ def _path_body(mvl, cfg):
     return Trace.from_records(recs)
 
 
+def _path_kernel(mvl, cfg):
+    """Jaxpr-frontend spec: the real min-propagation dataflow — slides and
+    arith derive from the jaxpr with true operand dependencies on the loads
+    (the hand-coded body reads the same registers).  The next row's block is
+    fetched while the result is stored (software pipelining, as the
+    hand-coded body orders it)."""
+    vl = min(mvl, cfg.mvl) if cfg else mvl
+    ins = (fe.Stream("wall", _PATH_WALL_KB),
+           fe.Stream("row", _PATH_ROW_KB),
+           fe.Stream("row_prev", _PATH_ROW_KB))
+
+    def fn(wall, row, row_prev):
+        left = jnp.roll(row, 1)
+        right = jnp.roll(row, -1)
+        m1 = jnp.minimum(left, row)
+        m2 = jnp.minimum(m1, right)
+        c1 = m2 + wall
+        c2 = c1 + row_prev
+        s3 = jnp.roll(c2, 1)
+        s4 = jnp.roll(c2, -1)
+        m3 = jnp.minimum(s3, s4)
+        m4 = jnp.minimum(m3, c2)
+        return m4
+
+    return [fe.ScalarWork(_PATH_S1),
+            fe.KernelBody(fn, vl, ins=ins, outs=("cost",)),
+            fe.KernelBody(lambda nxt, cost: cost, vl,
+                          ins=(fe.Stream("row_next", _PATH_ROW_KB), "cost"),
+                          outs=(fe.Stream("row_out", _PATH_ROW_KB),))]
+
+
 # ===========================================================================
 # Streamcluster (Table 8).  Memory-bound; dist() = loads + mul-sub + reduce.
 #   calls = 59,533,158 (mem@128); dims = 128 (large input)
@@ -324,11 +396,34 @@ def _sc_body(mvl, cfg):
         recs.append(scalar_block(2.5))
         recs.append(vload(vl_eff, dst=i % 8, footprint_kb=_SC_WSET_KB))
         recs.append(varith(vl_eff, FU_MUL, src1=i % 8, src2=8, dst=9 + i % 8))
-    recs.append(vreduce(mvl, src1=9, dst=20, fu=FU_SIMPLE))
-    recs.append(vmask_scalar(mvl, src1=20))
+    # the reduction runs at the requested VL (<= 128 dims), not the raw MVL
+    recs.append(vreduce(vl_eff, src1=9, dst=20, fu=FU_SIMPLE))
+    recs.append(vmask_scalar(vl_eff, src1=20))
     # the scalar core evaluates the center-opening cost before the next call
     recs.append(scalar_block(30, dep_scalar=True))
     return Trace.from_records(recs)
+
+
+def _sc_kernel(mvl, cfg):
+    """Jaxpr-frontend spec: each dist() sub-block is load + multiply with a
+    real load->arith dependency (like the hand-coded body), chained through
+    a named carry into the final reduction."""
+    vl_eff = min(mvl, _SC_DIMS, cfg.mvl if cfg else mvl)
+    iters = math.ceil(_SC_DIMS / vl_eff)
+    segs = []
+    for i in range(iters):
+        segs.append(fe.ScalarWork(2.5))
+        if i == 0:
+            seg_fn, seg_ins = (lambda x: x * x), \
+                (fe.Stream("block0", _SC_WSET_KB),)
+        else:
+            seg_fn, seg_ins = (lambda x, acc: acc * x), \
+                (fe.Stream(f"block{i}", _SC_WSET_KB), "acc")
+        segs.append(fe.KernelBody(seg_fn, vl_eff, ins=seg_ins, outs=("acc",)))
+    segs.append(fe.KernelBody(lambda acc: jnp.sum(acc), vl_eff, ins=("acc",)))
+    segs.append(fe.RawRecords((vmask_scalar(vl_eff, src1=20),)))
+    segs.append(fe.ScalarWork(30, dep_scalar=True))
+    return segs
 
 
 # ===========================================================================
@@ -379,6 +474,20 @@ def _sw_body(mvl, cfg):
     recs += _arith_seq(24, _SW_MIX, vl)
     recs.append(vstore(vl, src1=10, footprint_kb=fp))
     return Trace.from_records(recs)
+
+
+def _sw_kernel(mvl, cfg):
+    """Jaxpr-frontend spec: HJM path-state streams with the VL-scaled
+    footprint (the Fig-10 lever), characterized 24-op chain."""
+    vl = min(mvl, cfg.mvl) if cfg else mvl
+    fp = _sw_footprint_kb(vl)
+    ins = tuple(fe.Stream(f"hjm{i}", fp) for i in range(4))
+
+    def fn(*streams):
+        return fe.chain_ops(24, _SW_MIX, seeds=(1.5,), vl=vl)[6]
+
+    return [fe.ScalarWork(52.35),
+            fe.KernelBody(fn, vl, ins=ins, outs=(fe.Stream("path", fp),))]
 
 
 # ===========================================================================
@@ -448,7 +557,10 @@ def _ca_body(mvl, cfg):
     vl_req = 12  # representative fan size (E[f] ~ 10.15, use 12)
     vl = min(vl_req, mvl, cfg.mvl if cfg else mvl)
     iters = math.ceil(vl_req / vl)
-    mvl_eff = min(mvl, cfg.mvl) if cfg else mvl
+    # moves/spills execute at the configured MVL regardless of the requested
+    # VL (§4.1.2 — the large-MVL slowdown culprit), so they key off cfg.mvl
+    # even when the suite clamps the body to the app's max requested VL
+    mvl_eff = cfg.mvl if cfg else mvl
     recs = []
     for _ in range(2):  # two picked nodes
         # moves of the coordinate arguments (full MVL, §4.1.2)
@@ -470,31 +582,77 @@ def _ca_body(mvl, cfg):
     return Trace.from_records(recs)
 
 
+def _ca_kernel(mvl, cfg):
+    """Jaxpr-frontend spec: indexed netlist streams and the fan-in cost chain
+    derive from the jaxpr; the full-MVL argument moves/spills are declared
+    RawRecords (ABI artifacts, no JAX analogue), and the swap decision is a
+    dependent ScalarWork after the reduction hands its result over."""
+    vl_req = 12
+    vl = min(vl_req, mvl, cfg.mvl if cfg else mvl)
+    iters = math.ceil(vl_req / vl)
+    mvl_eff = cfg.mvl if cfg else mvl
+    n_mv = int(round(_CA_MOVES / _CA_N / 2))
+
+    def walk_fn(a, b):
+        return fe.chain_ops(22, _CA_MIX, seeds=(1.0,), vl=vl)[0]
+
+    segs = []
+    for _ in range(2):  # two picked nodes
+        segs.append(fe.RawRecords(tuple(
+            vmove(mvl_eff, src1=i % 4, dst=8 + i % 4) for i in range(n_mv))))
+        for it in range(iters):
+            segs.append(fe.ScalarWork(99.4 if it else 12))
+            segs.append(fe.KernelBody(
+                walk_fn, vl,
+                ins=(fe.Stream("net_a", _CA_HOT_KB, pattern=MEM_INDEXED),
+                     fe.Stream("net_b", _CA_HOT_KB, pattern=MEM_INDEXED)),
+                outs=("cost",)))
+        segs.append(fe.KernelBody(lambda cost: jnp.sum(cost), vl,
+                                  ins=("cost",)))
+        segs.append(fe.RawRecords((vmask_scalar(vl, src1=20),)))
+        segs.append(fe.ScalarWork(820, dep_scalar=True))
+    return segs
+
+
 # ===========================================================================
 
 APPS = {
     "blackscholes": App("blackscholes", _bs_counts, _bs_body,
                         lambda mvl: _BS_UNITS / mvl, _BS_MIX,
-                        init_scalar=573_256_509,
+                        init_scalar=573_256_509, kernel=_bs_kernel,
                         notes="regular DLP; PDE pricing; Table 3 / Fig 4"),
     "canneal": App("canneal", _ca_counts, _ca_body, _ca_chunks, _CA_MIX,
-                   max_vl=22,
+                   max_vl=22, kernel=_ca_kernel,
                    notes="irregular DLP; indexed loads; Table 4 / Fig 5"),
     "jacobi-2d": App("jacobi-2d", _j2_counts, _j2_body,
                      lambda mvl: _J2_CHUNK8 * 8 / mvl, _J2_MIX,
+                     kernel=_j2_kernel,
                      notes="stencil; slides stress interconnect; Table 5 / Fig 6"),
     "particlefilter": App("particlefilter", _pf_counts, _pf_body, _pf_chunks,
-                          _PF_MIX,
+                          _PF_MIX, kernel=_pf_kernel,
                           notes="mask ops stall scalar core; Table 6 / Fig 7"),
     "pathfinder": App("pathfinder", _path_counts, _path_body,
                       lambda mvl: _PATH_CHUNK8 * 8 / mvl, {"simple": 1.0},
+                      kernel=_path_kernel,
                       notes="26% element-manip instrs; Table 7 / Fig 8"),
     "streamcluster": App("streamcluster", _sc_counts, _sc_body, _sc_chunks,
-                         _SC_MIX, max_vl=_SC_DIMS,
+                         _SC_MIX, max_vl=_SC_DIMS, kernel=_sc_kernel,
                          notes="memory bound; reduction/call; Table 8 / Fig 9"),
     "swaptions": App("swaptions", _sw_counts, _sw_body, _sw_chunks, _SW_MIX,
+                     kernel=_sw_kernel,
                      notes="HJM Monte-Carlo; LLC sensitivity; Table 9 / Fig 10"),
 }
+
+# The paper's RiVec suite: both frontends exist and must cross-validate
+# (repro.core.frontend.cross_validate_all).
+RIVEC_APPS = tuple(sorted(APPS))
+
+# Frontend-only ML workloads (no hand-coded bodies: the lowered kernel IS
+# the body) — registered here so the whole toolchain (suite sweeps, golden
+# regression, module_stress) sees one app registry.
+from repro.core import workloads_ml as _ml  # noqa: E402  (needs App/Counts)
+
+APPS.update(_ml.make_apps(App, Counts))
 
 
 # With the engine batched, rebuilding ~300-entry traces per config point is a

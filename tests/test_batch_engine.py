@@ -119,3 +119,43 @@ def test_batch_reuses_compiled_executable():
                                    interconnect="crossbar")
     eng.simulate_batch([longer], [other, other])
     assert eng.jit_cache_size() == before
+
+
+def test_empty_batches_return_empty():
+    assert eng.simulate_batch([], []) == []
+    assert eng.steady_state_time_batch([], []) == []
+
+
+def test_single_trace_broadcasts_against_many_configs():
+    cfg_grid = [eng.VectorEngineConfig(mvl=m, lanes=l)
+                for m in (8, 64, 256) for l in (1, 8)]
+    tr = tracegen.body_for("swaptions", 64, cfg_grid[0]).tile(2)
+    rows = eng.simulate_batch([tr], cfg_grid)
+    times = eng.steady_state_time_batch([tracegen.body_for("swaptions", 64,
+                                                           cfg_grid[0])],
+                                        cfg_grid, warmup=4, measure=8)
+    assert len(rows) == len(times) == len(cfg_grid)
+    for cfg, row, t in zip(cfg_grid, rows, times):
+        want = eng.simulate(tr, cfg)
+        for k in want:
+            _close(row[k], want[k])
+        _close(t, eng.steady_state_time(
+            tracegen.body_for("swaptions", 64, cfg_grid[0]), cfg,
+            warmup=4, measure=8))
+
+
+def test_mixed_length_bucket_batch_matches_sequential():
+    """Traces landing in different CHUNK buckets run as separate groups but
+    must come back in input order, equal to sequential simulate."""
+    cfg = eng.VectorEngineConfig(mvl=64, lanes=4)
+    short = tracegen.body_for("pathfinder", 64, cfg)          # ~16 instrs
+    mid = tracegen.body_for("blackscholes", 64, cfg).tile(4)  # ~1.2k
+    long = tracegen.body_for("particlefilter", 64, cfg).tile(3)  # ~2.8k
+    traces = [mid, short, long, short.tile(2)]
+    buckets = {eng._len_bucket(len(t)) for t in traces}
+    assert len(buckets) >= 2          # the premise: a genuinely mixed batch
+    rows = eng.simulate_batch(traces, [cfg] * len(traces))
+    for tr, row in zip(traces, rows):
+        want = eng.simulate(tr, cfg)
+        for k in want:
+            _close(row[k], want[k])

@@ -121,3 +121,19 @@ def test_dep_scalar_stalls():
     t_base = eng.simulate(isa.Trace.from_records(base * 8), cfg)["time"]
     t_dep = eng.simulate(isa.Trace.from_records(dep * 8), cfg)["time"]
     assert t_dep >= t_base
+
+
+def test_config_rejects_capacities_beyond_ring():
+    """engine.MAX_RING used to silently wrap (corrupting every result) when
+    a capacity exceeded it; construction now fails loudly."""
+    for kw in ({"rob_entries": eng.MAX_RING + 1},
+               {"queue_entries": eng.MAX_RING + 1},
+               {"phys_regs": 32 + eng.MAX_RING + 1}):
+        with pytest.raises(ValueError, match="MAX_RING"):
+            eng.VectorEngineConfig(**kw)
+    with pytest.raises(ValueError, match="phys_regs"):
+        eng.VectorEngineConfig(phys_regs=32)
+    # boundary values are legal
+    eng.VectorEngineConfig(rob_entries=eng.MAX_RING,
+                           queue_entries=eng.MAX_RING,
+                           phys_regs=32 + eng.MAX_RING)

@@ -26,7 +26,7 @@ def _t(fn, *args, reps=3):
 
 
 # machine-readable results collected while the driver runs; main() writes
-# them to --bench-json (BENCH_pr3.json by default)
+# them to --bench-json (BENCH_pr4.json by default)
 _BENCH: dict = {}
 
 
@@ -140,7 +140,7 @@ def sweep_wallclock(quick: bool = False):
 
 def steady_state_table():
     """Per-app steady-state loop-body times at the reference config — the
-    per-app entry of BENCH_pr3.json, one batched dispatch set."""
+    per-app entry of the bench JSON, one batched dispatch set."""
     from repro.core import engine as eng
     from repro.core import suite, tracegen
     cfg = eng.VectorEngineConfig(mvl=64, lanes=4)
@@ -171,6 +171,49 @@ def frontend_crossval():
     return [(f"frontend_crossval_{r.app}", us_each,
              f"time_err={r.time_rel_err:.4f}|{'ok' if r.ok else 'FAIL'}")
             for r in reports]
+
+
+def dse_study(quick: bool = False, cache_path: str | None = None,
+              budget_kb: float = 512.0):
+    """Design-space exploration acceptance rows: enumerate a DSE space
+    (quick: the 384-point ``SPACE_QUICK``; full: the 1536-point
+    ``SPACE_FULL`` over all 10 apps), shard the config axis across local
+    devices, dedup dispatches through the persistent result cache, and
+    reduce to per-app Pareto frontiers + best-config-under-budget.
+
+    A repeated invocation with the same ``--dse-cache`` must report >=99%
+    cache hits and an identical ``frontier_fingerprint`` in BENCH_pr4.json
+    (the DSE determinism contract)."""
+    from repro.configs import vector_engine as vcfg
+    from repro.core import dse
+    space = vcfg.SPACE_QUICK if quick else vcfg.SPACE_FULL
+    apps = vcfg.SPACE_PRESET_APPS["quick" if quick else "full"]
+    cache = dse.ResultCache(cache_path)
+    t0 = time.perf_counter()
+    res = dse.explore(space, apps, cache=cache)
+    wall = time.perf_counter() - t0
+    frontiers = res.frontiers()
+    fp = dse._frontier_fingerprint(res)
+    _BENCH["dse"] = {
+        "space": res.space, "n_configs": res.n_configs,
+        "apps": list(res.apps), "n_cells": len(res.records),
+        "wall_s": wall, "cache": res.stats, "cache_path": cache_path,
+        "frontier_fingerprint": fp,
+        "frontiers": dse.frontier_summary(res, budgets=(256.0, budget_kb,
+                                                        1024.0)),
+    }
+    rows = [(f"dse_{res.space}_{res.n_configs}cfg_{len(res.apps)}apps",
+             wall * 1e6,
+             f"wall_s={wall:.2f}|simulated={res.stats['simulated']}"
+             f"|hit_rate={res.stats['hit_rate']:.3f}"
+             f"|devices={res.stats['devices']}|frontier_fp={fp}")]
+    by_app = res.by_app()
+    for app in res.apps:
+        best = dse.best_under_budget(by_app[app], budget_kb)
+        rows.append((f"dse_frontier_{app}", 0.0,
+                     f"{len(frontiers[app])}pts|best{budget_kb:g}kb="
+                     f"{best.label if best else 'none'}"))
+    return rows
 
 
 def kernel_microbench():
@@ -248,13 +291,29 @@ def main(argv=None) -> None:
                     help="smoke mode: characterization + batched figures + "
                          "frontend cross-validation + a small batched-vs-"
                          "sequential sweep; skips kernel microbenchmarks and "
-                         "the roofline table")
+                         "the roofline table.  With --dse: the 384-point "
+                         "SPACE_QUICK instead of the 1536-point SPACE_FULL")
+    ap.add_argument("--dse", action="store_true",
+                    help="design-space exploration rows only: enumerate the "
+                         "DSE space, shard across devices, dedup through "
+                         "--dse-cache, report Pareto frontiers + cache-hit "
+                         "stats (a repeat run must be >=99%% hits with an "
+                         "identical frontier fingerprint)")
+    ap.add_argument("--dse-cache", default=os.path.join(
+        os.path.dirname(__file__), "..", "results", "dse_cache.jsonl"),
+        help="persistent DSE result cache (JSONL)")
+    ap.add_argument("--dse-budget-kb", type=float, default=512.0)
     ap.add_argument("--bench-json", default=os.path.join(
-        os.path.dirname(__file__), "..", "BENCH_pr3.json"),
+        os.path.dirname(__file__), "..", "BENCH_pr4.json"),
         help="machine-readable results path (sweep wall-clock, batched "
-             "speedup, per-app steady-state times, crossval verdict)")
+             "speedup, per-app steady-state times, crossval verdict, DSE "
+             "frontiers + cache stats)")
     args = ap.parse_args(argv)
-    if args.quick:
+    if args.dse:
+        fns = (lambda: dse_study(quick=args.quick,
+                                 cache_path=args.dse_cache,
+                                 budget_kb=args.dse_budget_kb),)
+    elif args.quick:
         fns = (table_3_to_9_characterization, figures_4_to_10_scalability,
                sweep_llc, sweep_mshr, frontend_crossval, steady_state_table,
                lambda: sweep_wallclock(quick=True))

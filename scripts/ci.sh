@@ -6,25 +6,36 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1 tests =="
-python -m pytest -x -q
+# -p no:randomly: the property tier (tests/test_properties.py) must run with
+# its fixed seeds — the hypothesis shim seeds its own RNG and real hypothesis
+# runs derandomized, but pytest-randomly (if ever installed) would still
+# reorder/reseed; disabling an absent plugin is a no-op.
+python -m pytest -x -q -p no:randomly
 
 echo "== docs gate: doctests =="
-python -m pytest --doctest-modules -q \
-  src/repro/core/memory.py src/repro/core/suite.py
+python -m pytest --doctest-modules -q -p no:randomly \
+  src/repro/core/memory.py src/repro/core/suite.py src/repro/core/dse.py
 
-echo "== docs gate: README quickstart snippet =="
-# extract the FIRST ```python fenced block from the README and execute it,
-# so the documented example cannot rot
+echo "== docs gate: README snippets =="
+# extract EVERY ```python fenced block from the README and execute them in
+# order as one script, so no documented example can rot
 snippet="$(mktemp --suffix=.py)"
 trap 'rm -f "$snippet"' EXIT
-awk '/^```python/{if(!done){f=1};next} /^```/{if(f){f=0;done=1}} f' \
-  README.md > "$snippet"
+awk '/^```python/{f=1;next} /^```/{f=0} f' README.md > "$snippet"
 python "$snippet"
 
 echo "== frontend cross-validation gate =="
 # derived (jaxpr-lowered) bodies vs hand-coded tracegen bodies: exact
 # kind/FU/pattern/element/scalar mixes, steady-state time within 5%
 python -m repro.core.frontend
+
+echo "== dse-smoke gate =="
+# 64-point space, single device: explore twice through a fresh on-disk
+# cache; the second pass must be 100% hits with a bitwise-identical
+# Pareto frontier (the DSE determinism contract)
+dse_tmp="$(mktemp -d)"
+trap 'rm -f "$snippet"; rm -rf "$dse_tmp"' EXIT
+python -m repro.core.dse --space smoke --cache "$dse_tmp/cache.jsonl" --smoke
 
 echo "== quick benchmark smoke =="
 python benchmarks/run.py --quick

@@ -1,9 +1,16 @@
-"""Regenerate tests/golden_sweep.json (the 24-config x 7-app speedup table).
+"""Golden sweep table (the 24-config x 10-app speedup grid): generate/check.
 
-Run after an *intentional* recalibration of the timing model, then review the
-diff — tests/test_golden_sweep.py pins every cell so silent drift fails CI.
+Two modes:
 
-    PYTHONPATH=src python scripts/gen_golden_sweep.py
+* default — regenerate ``tests/golden_sweep.json``.  Run after an
+  *intentional* recalibration of the timing model, then review the diff.
+* ``--check`` — regenerate **in memory** and diff against the checked-in
+  table with a per-cell tolerance report (app, cell, got, want, rel err),
+  exiting non-zero on drift.  This is what ``tests/test_golden_sweep.py``
+  wraps: a drifted table fails with the exact offending cells, not a silent
+  full-file mismatch.
+
+    PYTHONPATH=src python scripts/gen_golden_sweep.py [--check] [--rtol R]
 """
 from __future__ import annotations
 
@@ -14,18 +21,70 @@ from repro.core import suite
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "tests",
                    "golden_sweep.json")
+RTOL = 1e-2  # generous vs float32 platform jitter, tight vs real drift
 
 
-def main() -> None:
+def _payload() -> dict:
     table = suite.sweep_all()
-    payload = {app: {f"{m}x{l}": round(s, 6) for (m, l), s in grid.items()}
-               for app, grid in table.items()}
+    return {app: {f"{m}x{l}": round(s, 6) for (m, l), s in grid.items()}
+            for app, grid in table.items()}
+
+
+def diff_report(got: dict, golden: dict, rtol: float = RTOL) -> list[str]:
+    """Per-cell tolerance report between two payloads (empty == clean)."""
+    report: list[str] = []
+    for app in sorted(set(golden) - set(got)):
+        report.append(f"{app}: in golden table but not in sweep")
+    for app in sorted(set(got) - set(golden)):
+        report.append(f"{app}: swept but missing from golden table "
+                      f"(regenerate: PYTHONPATH=src python "
+                      f"scripts/gen_golden_sweep.py)")
+    for app in sorted(set(got) & set(golden)):
+        cells_got, cells_want = got[app], golden[app]
+        for cell in sorted(set(cells_want) - set(cells_got)):
+            report.append(f"{app} {cell}: missing from sweep")
+        for cell in sorted(set(cells_got) - set(cells_want)):
+            report.append(f"{app} {cell}: not in golden table")
+        for cell in sorted(set(cells_got) & set(cells_want)):
+            g, w = cells_got[cell], cells_want[cell]
+            rel = abs(g - w) / max(abs(w), 1e-12)
+            if rel > rtol:
+                report.append(f"{app} {cell}: got={g:.6f} want={w:.6f} "
+                              f"rel={rel:.2e} > rtol={rtol:g}")
+    return report
+
+
+def check(rtol: float = RTOL, golden_path: str = OUT) -> list[str]:
+    """Regenerate the sweep in memory and diff against the golden file.
+    Returns the per-cell report; never writes anything."""
+    with open(golden_path) as f:
+        golden = json.load(f)
+    return diff_report(_payload(), golden, rtol=rtol)
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="diff the regenerated sweep against the golden "
+                         "table instead of writing it")
+    ap.add_argument("--rtol", type=float, default=RTOL)
+    args = ap.parse_args(argv)
+    if args.check:
+        report = check(rtol=args.rtol)
+        for line in report:
+            print(line)
+        print(f"golden check: {len(report)} problem(s) at "
+              f"rtol={args.rtol:g}")
+        return 1 if report else 0
+    payload = _payload()
     with open(OUT, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
         f.write("\n")
     print(f"wrote {os.path.normpath(OUT)}: "
           f"{sum(len(g) for g in payload.values())} cells")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

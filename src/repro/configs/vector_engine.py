@@ -9,11 +9,18 @@ The memory-hierarchy variants are first-class batched studies: the Fig-10
 LLC grid (``TABLE10_L2_1MB``) and the MSHR saturation grid
 (``TABLE10_MSHR1``) run through the same compiled scan as the base grid —
 ``engine.VectorEngineConfig.label()`` keeps their result keys distinct.
+
+Beyond the fixed grids, the design-space exploration spaces
+(``SPACE_SMOKE`` / ``SPACE_QUICK`` / ``SPACE_FULL``) declare the *live* knob
+ranges the DSE engine (``repro.core.dse``) enumerates, shards across
+devices, and reduces to Pareto frontiers.  Every axis below is a traced
+engine parameter, so the whole space reuses one compiled scan.
 """
 from __future__ import annotations
 
 import dataclasses
 
+from repro.core.dse import DesignSpace
 from repro.core.engine import VectorEngineConfig
 
 MVLS = (8, 16, 32, 64, 128, 256)
@@ -40,3 +47,53 @@ TABLE10_L2_1MB = tuple(
 TABLE10_MSHR1 = tuple(
     dataclasses.replace(cfg, mshrs=1) for cfg in TABLE10
 )
+
+# ---------------------------------------------------------------------------
+# DSE spaces (repro.core.dse): embedded short-vector -> HPC long-vector.
+#
+# SPACE_FULL is the headline design space — the Table-10 grid crossed with
+# renaming depth, issue-queue size, issue policy, LLC capacity, MSHR file
+# and DRAM bandwidth: 6*4*2*2*2*2*2*2 = 1536 configurations.  SPACE_QUICK
+# (384) is the single-device acceptance sweep (`benchmarks/run.py --dse
+# --quick`); SPACE_SMOKE (64) is the CI cache/dedup gate.
+# ---------------------------------------------------------------------------
+
+SPACE_FULL = DesignSpace.of(
+    "full",
+    mvl=MVLS,                        # 6
+    lanes=LANES,                     # 4
+    phys_regs=(40, 64),              # 2  renaming depth
+    queue_entries=(8, 16),           # 2  issue-queue size
+    ooo_issue=(False, True),         # 2  issue policy
+    l2_kb=(256, 1024),               # 2  Fig-10 LLC axis
+    mshrs=(1, 16),                   # 2  gather-miss concurrency
+    dram_bw_bytes_cycle=(4.0, 8.0),  # 2  memory-system generation
+)
+
+SPACE_QUICK = DesignSpace.of(
+    "quick",
+    mvl=MVLS,                        # 6
+    lanes=LANES,                     # 4
+    ooo_issue=(False, True),         # 2
+    l2_kb=(256, 1024),               # 2
+    mshrs=(1, 16),                   # 2
+    dram_bw_bytes_cycle=(4.0, 8.0),  # 2  -> 384 points (acceptance: >=256)
+)
+
+SPACE_SMOKE = DesignSpace.of(
+    "smoke",
+    mvl=(16, 64, 128, 256),
+    lanes=(2, 8),
+    l2_kb=(256, 1024),
+    mshrs=(1, 16),
+    dram_bw_bytes_cycle=(4.0, 8.0),
+)
+
+# Default app subsets per space: smoke pairs a compute-bound app with the
+# gather-heavy one (exercises both memory paths), quick adds a frontend-only
+# ML workload, full is the whole 10-app suite.
+SPACE_PRESET_APPS = {
+    "smoke": ("blackscholes", "canneal"),
+    "quick": ("blackscholes", "canneal", "ssd_scan"),
+    "full": None,  # explore() default: every registered app
+}

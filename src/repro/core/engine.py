@@ -30,6 +30,8 @@ sweeps hit the jit cache.
 """
 from __future__ import annotations
 
+import functools
+import hashlib
 from dataclasses import dataclass, fields
 
 import jax
@@ -89,8 +91,15 @@ class VectorEngineConfig:
     def label(self) -> str:
         """Result key: ``mvl{m}_l{l}`` plus one suffix per knob that differs
         from the Table-10 defaults — derived from the dataclass fields, so
-        configs differing in *any* swept axis (LLC, MSHRs, ports, latencies,
-        interconnect, ...) never collide."""
+        configs differing in *any* swept axis (LLC, MSHRs, DRAM bandwidth,
+        ports, latencies, interconnect, ...) never collide.
+
+        The label keys the DSE result cache (``repro.core.dse``), so float
+        knobs must render round-trip exactly: ``%g`` keeps 6 significant
+        digits, which would alias e.g. two ``dram_bw_bytes_cycle`` values
+        differing in the 7th — those fall back to full-precision ``repr``.
+        ``tests/test_dse.py`` asserts label uniqueness over ``SPACE_FULL``.
+        """
         s = f"mvl{self.mvl}_l{self.lanes}"
         for f in fields(self):
             v = getattr(self, f.name)
@@ -101,7 +110,10 @@ class VectorEngineConfig:
             elif f.name == "interconnect":
                 s += f"_{v}"
             else:
-                s += f"_{f.name}{v:g}"
+                r = f"{v:g}"
+                if isinstance(v, float) and float(r) != v:
+                    r = repr(v)
+                s += f"_{f.name}{r}"
         return s
 
 
@@ -288,6 +300,48 @@ def _chunk_core(carry, xs, params):
 _simulate_jit = jax.jit(_scan_core)
 _chunk_batch_jit = jax.jit(jax.vmap(_chunk_core))
 
+
+_SHARDED_JITS: dict[int, object] = {}
+
+
+def _sharded_chunk_jit(ndev: int):
+    """The batched chunk scan sharded over the config axis: an SPMD wrapper
+    around the same vmapped ``_chunk_core``, so each device scans its slice
+    of the batch and results are indistinguishable from the single-device
+    path (the per-lane scan arithmetic is shared).
+
+    Built lazily per device count; ``repro.distributed.sharding`` provides
+    the version-compatible ``shard_map``.
+    """
+    f = _SHARDED_JITS.get(ndev)
+    if f is None:
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        from repro.distributed.sharding import compat_shard_map
+        # local_devices, not devices: in a multi-process job the mesh must
+        # hold only this process's addressable devices
+        mesh = Mesh(np.asarray(jax.local_devices()[:ndev]), ("cfg",))
+        f = _SHARDED_JITS[ndev] = jax.jit(compat_shard_map(
+            jax.vmap(_chunk_core), mesh, in_specs=P("cfg"),
+            out_specs=P("cfg")))
+    return f
+
+
+def _dispatch_chunk_batch(carry, xs, params, batch_bucket: int):
+    """Dispatch one chunk of the batched scan, sharding the config axis
+    across local devices when there is more than one (and the power-of-two
+    batch bucket divides evenly); otherwise the single-device vmapped path.
+
+    This is the DSE sharding contract (docs/architecture.md): the config
+    axis is embarrassingly parallel — no collectives cross the shard
+    boundary — so a many-config sweep scales with device count while the
+    one-device fallback keeps every existing caller bitwise unchanged.
+    """
+    ndev = jax.local_device_count()
+    if ndev > 1 and batch_bucket % ndev == 0:
+        return _sharded_chunk_jit(ndev)(carry, xs, params)
+    return _chunk_batch_jit(carry, xs, params)
+
 # Batched traces are NOP-padded to multiples of CHUNK and scanned chunk by
 # chunk; the compilation key is (batch bucket, CHUNK) only.
 CHUNK = 1024
@@ -320,6 +374,45 @@ def _cfg_params_np(cfg: VectorEngineConfig) -> tuple:
     )
 
 
+# Bump when the scan-step arithmetic changes in a way the calibration
+# constants below don't capture (new resource model, different recurrence):
+# it invalidates every persistent DSE cache entry.
+MODEL_VERSION = 1
+
+
+def model_fingerprint() -> str:
+    """Hash of the timing model's calibration state: the latency-class
+    constants here plus the memory-model constants.  Part of the DSE result
+    cache key, so a recalibration (benchmarks/calibrate.py edits these
+    arrays) can never be served stale cached timings — the cache just goes
+    cold.  ``MODEL_VERSION`` covers structural model changes the constants
+    don't express."""
+    h = hashlib.sha1()
+    h.update(f"v{MODEL_VERSION}".encode())
+    for a in (SCALAR_CYCLES, VEC_PIPE_DEPTH, VEC_ELEM_CYCLES):
+        h.update(np.asarray(a).tobytes())
+    for c in (memory.DRAM_BW_BYTES_PER_CYCLE, memory.DRAM_MLP,
+              memory.PREFETCH_DEPTH):
+        h.update(np.float32(c).tobytes())
+    return h.hexdigest()[:8]
+
+
+def config_fingerprint(cfg: VectorEngineConfig) -> str:
+    """Hash of everything about a config the *timing model* consumes: the
+    engine parameter vector (``_cfg_params_np``), which excludes knobs that
+    only shape the trace (``mvl`` beyond its effect on the body).
+
+    This is the DSE result cache's config key half: two configs that differ
+    only in a timing-irrelevant way (e.g. ``mvl=128`` vs ``mvl=256`` for an
+    app whose ``max_vl`` caps both at 64, producing the same clamped body)
+    share a fingerprint, so the cache dedups their dispatches within a run.
+    """
+    h = hashlib.sha1()
+    for p in _cfg_params_np(cfg):
+        h.update(np.asarray(p).tobytes())
+    return h.hexdigest()[:16]
+
+
 def simulate(trace: isa.Trace, cfg: VectorEngineConfig) -> dict:
     """Run the timing model; returns times in vector-engine cycles (=ns)."""
     params = tuple(jnp.asarray(p) for p in _cfg_params_np(cfg))
@@ -350,7 +443,9 @@ def jit_cache_size() -> int:
     are traced, lengths are chunked, batch sizes are padded to powers of two.
     """
     try:
-        return int(_simulate_jit._cache_size() + _chunk_batch_jit._cache_size())
+        n = int(_simulate_jit._cache_size() + _chunk_batch_jit._cache_size())
+        n += sum(int(f._cache_size()) for f in _SHARDED_JITS.values())
+        return n
     except AttributeError:
         return -1
 
@@ -376,7 +471,7 @@ def _run_batch_group(traces: list[isa.Trace], cfgs: list[VectorEngineConfig],
     times = []
     for i in range(length // CHUNK):
         xs = tuple(jnp.asarray(a[:, i * CHUNK:(i + 1) * CHUNK]) for a in xs_np)
-        carry = _chunk_batch_jit(carry, xs, params)
+        carry = _dispatch_chunk_batch(carry, xs, params, bb)
         if collect_times:
             times.append(jnp.maximum(carry[9], carry[14]))
     out = {k: np.asarray(v) for k, v in _metrics(carry).items()}

@@ -245,6 +245,21 @@ class TraceBuilder:
         return Trace.from_records(self._recs)
 
 
+def trace_fingerprint(trace: Trace) -> str:
+    """Content hash of a trace (all fields, program order) — the trace half
+    of the DSE result-cache key (``repro.core.dse``).  Two traces share a
+    fingerprint iff every instruction field is bitwise identical, so cached
+    timings can never be served to a different workload."""
+    import hashlib
+    h = hashlib.sha1()
+    for name in Trace.__dataclass_fields__:
+        a = np.ascontiguousarray(getattr(trace, name))
+        h.update(name.encode())
+        h.update(str(a.dtype).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()[:16]
+
+
 def trace_registers(trace: Trace) -> int:
     """Number of distinct logical vector registers a trace touches — the
     register-pressure figure the cross-validation contract compares."""

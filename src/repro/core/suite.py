@@ -131,3 +131,26 @@ def sweep_all(apps=None, mvls=(8, 16, 32, 64, 128, 256), lanes=(1, 2, 4, 8),
     flat = speedup_batch(pairs)
     return {a: dict(zip(grid, flat[i * len(grid):(i + 1) * len(grid)]))
             for i, a in enumerate(apps)}
+
+
+def dse_explore(space, apps=None, cache=None, warmup: int = 8,
+                measure: int = 24):
+    """Design-space exploration over the suite: evaluate ``apps`` (default:
+    all 10) on every config of ``space``, sharded across devices and deduped
+    through ``cache`` — ``repro.core.dse.explore`` with the suite's timing
+    pipeline.  Returns a ``dse.DseResult``; ``.frontiers()`` gives the
+    per-app Pareto frontier (runtime vs. area proxy)."""
+    from repro.core import dse
+    return dse.explore(space, apps=apps, cache=cache, warmup=warmup,
+                       measure=measure)
+
+
+def dse_best_under_budget(space, budget_kb: float, apps=None,
+                          cache=None) -> dict:
+    """Per-app "best config under an area budget" report: the fastest
+    explored config whose ``dse.area_proxy_kb`` fits ``budget_kb``
+    (``None`` when nothing fits)."""
+    from repro.core import dse
+    res = dse.explore(space, apps=apps, cache=cache)
+    return {a: dse.best_under_budget(recs, budget_kb)
+            for a, recs in res.by_app().items()}

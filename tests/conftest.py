@@ -1,0 +1,8 @@
+"""Shared pytest configuration for the suite."""
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: spawns a subprocess / long wall-clock (kept in tier-1, but "
+        "deselectable with -m 'not slow')")

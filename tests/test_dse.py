@@ -1,0 +1,258 @@
+"""DSE subsystem tests: spaces, cache/dedup, Pareto reductions, sharding.
+
+The expensive end-to-end behavior (384-point sweep, repeat-run cache hits)
+lives in ``benchmarks/run.py --dse`` and the ``scripts/ci.sh`` dse-smoke
+gate; here the spaces are kept tiny so the suite stays fast.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import dse
+from repro.core import engine as eng
+from repro.core import suite
+from repro.configs import vector_engine as vcfg
+
+
+# ------------------------------------------------------------- DesignSpace
+
+def test_design_space_size_and_enumeration_order():
+    sp = dse.DesignSpace.of("t", mvl=(8, 64), lanes=(1, 4), mshrs=(1, 16))
+    assert sp.size() == 8
+    cfgs = sp.configs()
+    assert len(cfgs) == 8
+    # last axis fastest, and config_at agrees with configs()
+    assert (cfgs[0].mvl, cfgs[0].lanes, cfgs[0].mshrs) == (8, 1, 1)
+    assert (cfgs[1].mvl, cfgs[1].lanes, cfgs[1].mshrs) == (8, 1, 16)
+    assert (cfgs[-1].mvl, cfgs[-1].lanes, cfgs[-1].mshrs) == (64, 4, 16)
+    for i, c in enumerate(cfgs):
+        assert sp.config_at(i) == c
+
+
+def test_design_space_validates_fields_and_choices():
+    with pytest.raises(ValueError, match="unknown"):
+        dse.DesignSpace.of("bad", not_a_knob=(1, 2))
+    with pytest.raises(ValueError, match="no choices"):
+        dse.DesignSpace.of("bad", mvl=())
+    with pytest.raises(IndexError):
+        dse.DesignSpace.of("t", mvl=(8, 64)).config_at(2)
+
+
+def test_design_space_sampling_is_deterministic_and_distinct():
+    sp = vcfg.SPACE_FULL
+    a = sp.sample(50, seed=3)
+    b = sp.sample(50, seed=3)
+    c = sp.sample(50, seed=4)
+    assert a == b
+    assert a != c
+    assert len({cfg.label() for cfg in a}) == 50
+    # n >= size degrades to full enumeration
+    tiny = dse.DesignSpace.of("t", mvl=(8, 64))
+    assert tiny.sample(10) == tiny.configs()
+
+
+def test_space_presets_have_documented_sizes():
+    assert vcfg.SPACE_SMOKE.size() == 64
+    assert vcfg.SPACE_QUICK.size() == 384
+    assert vcfg.SPACE_FULL.size() == 1536
+    # every axis is a real config field; the spaces construct cleanly
+    assert len(vcfg.SPACE_FULL.configs()) == 1536
+
+
+def test_labels_unique_over_space_full():
+    """ISSUE satellite: the result-cache/result keys over the full DSE space
+    (incl. the dram_bw_bytes_cycle axis) must never alias."""
+    cfgs = vcfg.SPACE_FULL.configs()
+    labels = [c.label() for c in cfgs]
+    assert len(set(labels)) == len(cfgs)
+    # the DRAM-bandwidth axis specifically is keyed
+    base = eng.VectorEngineConfig(mvl=64, lanes=4, dram_bw_bytes_cycle=8.0)
+    assert "dram_bw" in base.label()
+    # float knobs that %g would round together stay distinct
+    a = eng.VectorEngineConfig(dram_bw_bytes_cycle=4.0000001)
+    b = eng.VectorEngineConfig(dram_bw_bytes_cycle=4.0000002)
+    assert a.label() != b.label()
+
+
+# ----------------------------------------------------------- area/cost proxy
+
+def test_area_proxy_monotone_in_capability():
+    base = eng.VectorEngineConfig(mvl=64, lanes=4)
+    for up in (dict(mvl=256), dict(lanes=8), dict(phys_regs=64),
+               dict(l2_kb=1024), dict(mshrs=64), dict(l1_kb=64)):
+        import dataclasses
+        bigger = dataclasses.replace(base, **up)
+        assert dse.area_proxy_kb(bigger) > dse.area_proxy_kb(base), up
+
+
+# ------------------------------------------------------------- ResultCache
+
+def test_result_cache_roundtrip_and_stats(tmp_path):
+    path = str(tmp_path / "cache.jsonl")
+    c = dse.ResultCache(path)
+    assert c.get("k1") is None and c.misses == 1
+    c.put("k1", 1.25)
+    c.flush()
+    assert c.get("k1") == 1.25 and c.hits == 1
+    # a fresh object re-reads the file: persistence at full float precision
+    c2 = dse.ResultCache(path)
+    assert len(c2) == 1 and c2.get("k1") == 1.25
+    c2.put("k2", 3.0000000000000004)
+    c2.flush()
+    assert dse.ResultCache(path).get("k2") == 3.0000000000000004
+
+
+def test_cache_key_separates_workloads_and_configs():
+    from repro.core import tracegen
+    cfg = eng.VectorEngineConfig(mvl=64, lanes=4)
+    b1 = tracegen.body_for("blackscholes", 64, cfg)
+    b2 = tracegen.body_for("canneal", 64, cfg)
+    k = dse.ResultCache.key
+    assert k(b1, cfg, 8, 24) != k(b2, cfg, 8, 24)
+    assert k(b1, cfg, 8, 24) != k(b1, cfg, 4, 24)
+    cfg2 = eng.VectorEngineConfig(mvl=64, lanes=8)
+    assert k(b1, cfg, 8, 24) != k(b1, cfg2, 8, 24)
+
+
+# ----------------------------------------------------------------- explore
+
+SP_TINY = dse.DesignSpace.of("tiny", mvl=(16, 64), lanes=(2, 8),
+                             l2_kb=(256, 1024))
+
+
+def test_explore_matches_suite_speedup():
+    res = dse.explore(SP_TINY, apps=("blackscholes",))
+    assert len(res.records) == 8
+    for r in res.records[:2]:
+        want = suite.speedup("blackscholes", r.cfg)
+        assert abs(r.speedup - want) <= 1e-5 * want
+
+
+def test_explore_repeat_is_bitwise_and_fully_cached(tmp_path):
+    path = str(tmp_path / "c.jsonl")
+    r1 = dse.explore(SP_TINY, apps=("blackscholes", "canneal"),
+                     cache=dse.ResultCache(path))
+    assert r1.stats["simulated"] == 16 and r1.stats["hit_rate"] == 0.0
+    r2 = dse.explore(SP_TINY, apps=("blackscholes", "canneal"),
+                     cache=dse.ResultCache(path))
+    assert r2.stats["simulated"] == 0 and r2.stats["hit_rate"] == 1.0
+    assert [ (a.label, a.steady_ns, a.runtime_ns, a.speedup, a.area_kb)
+             for a in r1.records ] == \
+           [ (a.label, a.steady_ns, a.runtime_ns, a.speedup, a.area_kb)
+             for a in r2.records ]
+    assert dse._frontier_fingerprint(r1) == dse._frontier_fingerprint(r2)
+
+
+def test_explore_dedups_mvl_aliases_within_a_run():
+    """streamcluster caps at max_vl=128: mvl=128 and mvl=256 induce the same
+    clamped body AND the same timing parameters, so the cache dedups them to
+    one dispatch and the records agree exactly."""
+    sp = dse.DesignSpace.of("alias", mvl=(128, 256), lanes=(4,))
+    res = dse.explore(sp, apps=("streamcluster",))
+    assert res.stats["in_run_dedup"] == 1
+    assert res.stats["simulated"] == 1
+    r128, r256 = res.records
+    assert r128.steady_ns == r256.steady_ns
+    assert r128.label != r256.label          # results still keyed apart
+
+
+# -------------------------------------------------- reductions: Pareto etc.
+
+def _rec(app, label, runtime, area):
+    return dse.DseRecord(app=app, label=label, cfg=None, steady_ns=runtime,
+                         runtime_ns=runtime, speedup=1.0, area_kb=area)
+
+
+def test_pareto_frontier_drops_dominated_points():
+    recs = [_rec("a", "slow_small", 10.0, 1.0),
+            _rec("a", "fast_big", 1.0, 10.0),
+            _rec("a", "dominated", 10.0, 10.0),
+            _rec("a", "mid", 5.0, 5.0),
+            _rec("a", "mid_dup", 5.0, 5.0)]   # tie resolves by label
+    labels = [r.label for r in dse.pareto_frontier(recs)]
+    assert labels == ["fast_big", "mid", "slow_small"]
+
+
+def test_best_under_budget():
+    recs = [_rec("a", "fast_big", 1.0, 10.0),
+            _rec("a", "mid", 5.0, 5.0),
+            _rec("a", "slow_small", 10.0, 1.0)]
+    assert dse.best_under_budget(recs, 100.0).label == "fast_big"
+    assert dse.best_under_budget(recs, 6.0).label == "mid"
+    assert dse.best_under_budget(recs, 0.5) is None
+
+
+def test_explored_frontier_is_nondominated_and_summary_serializes():
+    res = dse.explore(SP_TINY, apps=("canneal",))
+    frontier = res.frontiers()["canneal"]
+    assert frontier
+    for i, r in enumerate(frontier):
+        for s in frontier[i + 1:]:   # sorted: runtime up, area strictly down
+            assert s.runtime_ns >= r.runtime_ns and s.area_kb < r.area_kb
+        for other in res.records:    # nothing dominates a frontier point
+            assert not (other.runtime_ns < r.runtime_ns
+                        and other.area_kb < r.area_kb
+                        and other.app == r.app)
+    js = json.dumps(dse.frontier_summary(res, budgets=(256.0,)))
+    assert "canneal" in js
+
+
+def test_suite_entry_points():
+    res = suite.dse_explore(SP_TINY, apps=("blackscholes",))
+    assert res.n_configs == 8
+    best = suite.dse_best_under_budget(SP_TINY, 1e9, apps=("blackscholes",))
+    assert best["blackscholes"] is not None
+    assert best["blackscholes"].runtime_ns == min(
+        r.runtime_ns for r in res.records)
+
+
+# ------------------------------------------------------ sharded dispatch
+
+_SHARD_SCRIPT = r"""
+import jax
+assert jax.local_device_count() == 4, jax.local_device_count()
+from repro.core import engine as eng, tracegen
+cfg0 = eng.VectorEngineConfig(mvl=64, lanes=4)
+tr = tracegen.body_for("blackscholes", 64, cfg0).tile(2)
+cfgs = [eng.VectorEngineConfig(mvl=m, lanes=l)
+        for m in (8, 64, 128, 256) for l in (2, 8)]
+rows = eng.simulate_batch([tr], cfgs)
+assert eng._SHARDED_JITS, "sharded path never engaged"
+for c, r in zip(cfgs, rows):
+    w = eng.simulate(tr, c)
+    for k in w:
+        assert abs(r[k] - w[k]) <= 1e-5 * max(abs(w[k]), 1.0), (c.label(), k)
+print("SHARDED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_dispatch_matches_sequential_subprocess():
+    """The DSE sharding contract: with >1 device the config axis runs
+    through shard_map and results equal the sequential path.  Forced host
+    devices need a fresh process (XLA flags are read at jax import)."""
+    env = dict(os.environ,
+               XLA_FLAGS=(os.environ.get("XLA_FLAGS", "")
+                          + " --xla_force_host_platform_device_count=4"),
+               PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    proc = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT],
+                          cwd=os.path.join(os.path.dirname(__file__), ".."),
+                          env=env, capture_output=True, text=True,
+                          timeout=540)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "SHARDED_OK" in proc.stdout
+
+
+def test_single_device_fallback_never_builds_sharded_jit():
+    """On one device (the default CI environment) every dispatch takes the
+    chunked single-device path — the fallback half of the contract."""
+    import jax
+    if jax.local_device_count() != 1:
+        pytest.skip("multi-device environment")
+    dse.explore(dse.DesignSpace.of("t1", mvl=(16,), lanes=(2, 4)),
+                apps=("pathfinder",))
+    assert eng._SHARDED_JITS == {}

@@ -149,6 +149,125 @@ def test_unused_blocks_are_still_fetched():
     assert _kinds(tr)["load"] == 2       # block-spec semantics: b fetched too
 
 
+# --------------------------------------- differential: random jax kernels vs
+# a reference interpreter over the jaxpr
+
+
+# The random-kernel op pool: a subset of the supported primitive set whose
+# jaxpr spelling is stable (each entry is (callable, jaxpr primitive name)).
+_OP_POOL = (
+    (lambda a, b: a + b, "add"),
+    (lambda a, b: a - b, "sub"),
+    (lambda a, b: jnp.maximum(a, b), "max"),
+    (lambda a, b: jnp.minimum(a, b), "min"),
+    (lambda a, b: a * b, "mul"),
+    (lambda a, b: a / b, "div"),
+    (lambda a, b: jnp.sqrt(a) + b * 0, "sqrt"),
+    (lambda a, b: jnp.exp(a) + b * 0, "exp"),
+    (lambda a, b: jnp.tanh(a) + b * 0, "tanh"),
+)
+_TERMINALS = ("none", "sum", "roll", "cumsum", "any")
+
+
+def _random_kernel(seed, n_ops=6, n_ins=2):
+    """A random elementwise kernel from the supported primitive set: the op
+    sequence and operand wiring are drawn *outside* the traced function, so
+    the same structure is replayed identically at trace time."""
+    rng = np.random.RandomState(seed)
+    plan = [(int(rng.randint(len(_OP_POOL))),
+             int(rng.randint(n_ins + i)), int(rng.randint(n_ins + i)))
+            for i in range(n_ops)]
+    terminal = _TERMINALS[rng.randint(len(_TERMINALS))]
+
+    def fn(*ins):
+        vals = list(ins)
+        for op_i, s1, s2 in plan:
+            vals.append(_OP_POOL[op_i][0](vals[s1], vals[s2]))
+        out = vals[-1]
+        if terminal == "sum":
+            return jnp.sum(out)
+        if terminal == "roll":
+            return jnp.roll(out, 1) + out
+        if terminal == "cumsum":
+            return jnp.cumsum(out)
+        if terminal == "any":
+            return jnp.any(out > 0.0)
+        return out
+
+    return fn, terminal
+
+
+def _reference_counts(jaxpr, vl):
+    """Independent reference interpreter over a jaxpr: predicts the lowered
+    trace's kind/FU/element totals by walking equations directly — no
+    walker state, no register allocation, no scalar coalescing — so a
+    bookkeeping bug in the lowering pipeline cannot cancel itself out."""
+    fu_hist = np.zeros(4, int)
+    counts = {"slide": 0, "reduce": 0, "mask": 0, "elems": 0}
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name in fe.CALL_PRIMS:
+            p = eqn.params
+            inner = next(p[k] for k in ("jaxpr", "call_jaxpr", "fun_jaxpr")
+                         if k in p)
+            sub_fu, sub_counts = _reference_counts(
+                inner.jaxpr if hasattr(inner, "jaxpr") else inner, vl)
+            fu_hist += sub_fu
+            for k in counts:
+                counts[k] += sub_counts[k]
+        elif name in fe.SKIP_PRIMS:
+            continue
+        elif name in fe.CUMULATIVE_FU:
+            rounds = max(1, int(np.ceil(np.log2(max(vl, 2)))))
+            counts["slide"] += rounds
+            fu_hist[fe.CUMULATIVE_FU[name]] += rounds
+            counts["elems"] += 2 * rounds * vl
+        elif name in fe.REDUCE_FU:
+            counts["reduce"] += 1
+            counts["elems"] += vl
+        elif name in fe.MASK_PRIMS:
+            counts["mask"] += 1
+            counts["elems"] += vl
+        elif name in fe.SLIDE_PRIMS:
+            counts["slide"] += 1
+            counts["elems"] += vl
+        elif name in fe.FU_OF_PRIM:
+            if eqn.outvars[0].aval.shape:
+                fu_hist[fe.FU_OF_PRIM[name]] += 1
+                counts["elems"] += vl
+        else:  # a pool op lowering to an unexpected primitive
+            raise AssertionError(f"unmapped primitive {name!r}")
+    return fu_hist, counts
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_differential_random_kernels_match_reference(seed):
+    """Random small kernels from the supported primitive set: the full
+    lowering pipeline (walker -> register allocator -> TraceBuilder) must
+    produce exactly the FU/kind/element/pattern mix the reference
+    interpreter reads off the jaxpr."""
+    import jax
+    vl = int((16, 64)[seed % 2])
+    fn, terminal = _random_kernel(seed)
+    ins = tuple(fe.Stream(f"s{i}", 64.0) for i in range(2))
+    tr = fe.lower_trace([fe.KernelBody(fn, vl, ins=ins)])
+
+    avals = [jax.ShapeDtypeStruct((vl,), jnp.float32) for _ in ins]
+    ref_fu, ref = _reference_counts(jax.make_jaxpr(fn)(*avals).jaxpr, vl)
+
+    got_fu = np.bincount(tr.fu[tr.kind == isa.VARITH], minlength=4)
+    assert list(got_fu) == list(ref_fu), (terminal, got_fu, ref_fu)
+    assert int((tr.kind == isa.VSLIDE).sum()) == ref["slide"]
+    assert int((tr.kind == isa.VREDUCE).sum()) == ref["reduce"]
+    assert int((tr.kind == isa.VMASK_SCALAR).sum()) == ref["mask"]
+    # loads come only from the declared streams; element work matches
+    loads = tr.kind == isa.VLOAD
+    assert int(loads.sum()) == len(ins)
+    assert all(tr.mem_pattern[loads] == isa.MEM_UNIT)
+    vec = (tr.kind != isa.SCALAR_BLOCK) & ~loads & (tr.kind != isa.VSTORE)
+    assert int(tr.vl[vec].sum()) == ref["elems"], terminal
+
+
 # ------------------------------------------------- the cross-validation gate
 
 def test_cross_validation_all_rivec_apps():

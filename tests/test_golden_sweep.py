@@ -1,30 +1,24 @@
-"""Golden regression on the full paper sweep (Table 10 grid x 7 apps).
+"""Golden regression on the full paper sweep (Table 10 grid x 10 apps).
 
 The 8 anchor points in test_suite_timing.py catch gross miscalibration; this
-pins all 168 cells of the batched sweep against a checked-in snapshot so
+pins all 240 cells of the batched sweep against a checked-in snapshot so
 *silent* drift — an engine refactor nudging timings, a tracegen constant edit
-— fails loudly.  After an intentional recalibration, regenerate with
+— fails loudly.
+
+The comparison is the generator's own ``--check`` mode
+(``scripts/gen_golden_sweep.py``), so a failure prints the per-cell
+tolerance report (app, cell, got, want, rel err) instead of a bare file
+mismatch.  After an intentional recalibration, regenerate with
 ``PYTHONPATH=src python scripts/gen_golden_sweep.py`` and review the diff.
 """
-import json
 import os
+import sys
 
-from repro.core import suite
-
-GOLDEN = os.path.join(os.path.dirname(__file__), "golden_sweep.json")
-RTOL = 1e-2  # generous vs float32 platform jitter, tight vs real drift
+_SCRIPTS = os.path.join(os.path.dirname(__file__), "..", "scripts")
+sys.path.insert(0, _SCRIPTS)
+import gen_golden_sweep  # noqa: E402  (the generator doubles as the checker)
 
 
 def test_sweep_matches_golden_table():
-    with open(GOLDEN) as f:
-        golden = json.load(f)
-    got = suite.sweep_all()
-    assert set(got) == set(golden)
-    bad = []
-    for app, grid in got.items():
-        assert len(grid) == len(golden[app]) == 24
-        for (m, l), s in grid.items():
-            want = golden[app][f"{m}x{l}"]
-            if abs(s - want) > RTOL * abs(want):
-                bad.append((app, m, l, s, want))
-    assert not bad, f"{len(bad)} drifted cells, first 5: {bad[:5]}"
+    report = gen_golden_sweep.check()
+    assert not report, "golden sweep drift:\n" + "\n".join(report)

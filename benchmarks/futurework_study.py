@@ -6,7 +6,7 @@ in-order/ring/1-port design.  This study sweeps those knobs over the suite —
 the experiments the paper proposes as future work, runnable here because the
 engine model is jittable and cheap.
 
-    PYTHONPATH=src python benchmarks/futurework_study.py
+    PYTHONPATH=src python benchmarks/futurework_study.py [--quick]
 """
 from __future__ import annotations
 
@@ -28,22 +28,47 @@ VARIANTS = {
 }
 
 
-def main() -> None:
-    apps = list(tracegen.APPS)
+def study(apps=None, variants=None) -> dict:
+    """Speedup of each variant relative to the evaluated baseline design,
+    per app — the whole (variant x app) grid as ONE batched dispatch set
+    (it previously ran 60 sequential ``suite.speedup`` calls)."""
+    apps = list(tracegen.APPS) if apps is None else list(apps)
+    variants = dict(VARIANTS) if variants is None else dict(variants)
+    pairs = [(app, dataclasses.replace(BASE, **kw))
+             for kw in variants.values() for app in apps]
+    flat = suite.speedup_batch(pairs)
+    n = len(apps)
+    rows = {name: dict(zip(apps, flat[i * n:(i + 1) * n]))
+            for i, name in enumerate(variants)}
+    # normalize to the named baseline wherever it sits in the dict
+    base_name = next((k for k in variants if k.startswith("baseline")),
+                     next(iter(variants)))
+    base = rows[base_name]
+    return {name: {a: s / base[a] for a, s in row.items()}
+            for name, row in rows.items()}
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="two apps x three variants (driver smoke mode)")
+    args = ap.parse_args(argv)
+    apps = ["blackscholes", "jacobi-2d"] if args.quick else None
+    variants = None
+    if args.quick:
+        variants = {k: VARIANTS[k] for k in
+                    ("baseline(in-order,ring,1rp,1mp)", "ooo_issue",
+                     "crossbar")}
+    table = study(apps, variants)
+    apps = list(next(iter(table.values())))
     print(f"{'variant':34s}" + "".join(f"{a[:10]:>11s}" for a in apps))
-    base_speed = {}
-    for name, kw in VARIANTS.items():
-        cfg = dataclasses.replace(BASE, **kw)
-        row = []
-        for app in apps:
-            s = suite.speedup(app, cfg)
-            if name.startswith("baseline"):
-                base_speed[app] = s
-            row.append(s / base_speed[app])
-        print(f"{name:34s}" + "".join(f"{r:11.3f}" for r in row))
+    for name, row in table.items():
+        print(f"{name:34s}" + "".join(f"{row[a]:11.3f}" for a in apps))
     print("\n(values are speedup relative to the paper's evaluated design; "
           "MVL=64, 4 lanes)")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

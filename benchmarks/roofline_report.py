@@ -50,9 +50,19 @@ def roofline_tbl(rows):
     return "\n".join(out)
 
 
-if __name__ == "__main__":
-    rows = load(os.path.join(RESULTS, "dryrun.jsonl"))
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--results", default=RESULTS,
+                    help="results directory holding dryrun.jsonl")
+    args = ap.parse_args(argv)
+    rows = load(os.path.join(args.results, "dryrun.jsonl"))
     print("## Dry-run table\n")
     print(dryrun_table(rows))
     print("\n## Roofline (single pod 16x16)\n")
     print(roofline_tbl(rows))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

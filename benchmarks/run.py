@@ -26,7 +26,7 @@ def _t(fn, *args, reps=3):
 
 
 # machine-readable results collected while the driver runs; main() writes
-# them to --bench-json (BENCH_pr4.json by default)
+# them to --bench-json (BENCH_pr5.json by default)
 _BENCH: dict = {}
 
 
@@ -173,6 +173,62 @@ def frontend_crossval():
             for r in reports]
 
 
+def rvv_rows(quick: bool = False):
+    """RVV assembly frontend rows: per-app decode wall-clock (corpus ->
+    isa.Trace through the abstract interpreter), asm-vs-hand cross-validation
+    verdicts, and asm-variant sweep parity against the hand-coded suite.
+
+    ``--quick`` cross-validates at the two PR-3 reference configs; the full
+    run uses the per-MVL grid the ci.sh ``rvv-crossval`` gate enforces."""
+    from repro.core import engine as eng
+    from repro.core import rvv, suite, tracegen
+    rows = []
+    cfg = eng.VectorEngineConfig(mvl=64, lanes=4)
+    rvv._DECODE_CACHE.clear()
+    t0 = time.perf_counter()
+    for app in tracegen.RIVEC_APPS:
+        ta = time.perf_counter()
+        d = rvv.decode_app(app, suite.effective_mvl(app, cfg), cfg)
+        us = (time.perf_counter() - ta) * 1e6
+        rows.append((f"rvv_decode_{app}", us,
+                     f"{len(d.trace)}entries|chunks={d.chunks:g}"))
+    decode_wall = time.perf_counter() - t0
+    cfgs = [cfg, eng.VectorEngineConfig(mvl=16, lanes=2)] if quick else None
+    t0 = time.perf_counter()
+    reports = rvv.cross_validate_all(cfgs=cfgs)
+    crossval_wall = time.perf_counter() - t0
+    worst = max(r.time_rel_err for r in reports)
+    n_bitwise = sum(r.fingerprint_eq for r in reports)
+    for r in reports:
+        rows.append((f"rvv_crossval_{r.app}_{r.cfg_label}", 0.0,
+                     f"time_err={r.time_rel_err:.4f}"
+                     f"|{'bitwise' if r.fingerprint_eq else 'mix-exact'}"
+                     f"|{'ok' if r.ok else 'FAIL'}"))
+    # asm-variant sweep parity: the :asm suite through the batched engine
+    t0 = time.perf_counter()
+    asm_tab = suite.sweep_all(tracegen.ASM_APPS, mvls=(8, 64, 256),
+                              lanes=(1, 8))
+    hand_tab = suite.sweep_all(tracegen.RIVEC_APPS, mvls=(8, 64, 256),
+                               lanes=(1, 8))
+    sweep_wall = time.perf_counter() - t0
+    worst_sweep = max(
+        abs(asm_tab[f"{a}:asm"][k] - hand_tab[a][k]) / hand_tab[a][k]
+        for a in tracegen.RIVEC_APPS for k in hand_tab[a])
+    rows.append(("rvv_asm_sweep_parity", sweep_wall * 1e6,
+                 f"max_rel_diff={worst_sweep:.2e}|cells="
+                 f"{sum(len(v) for v in asm_tab.values())}"))
+    _BENCH["rvv"] = {
+        "decode_wall_s": decode_wall,
+        "crossval_wall_s": crossval_wall,
+        "all_ok": all(r.ok for r in reports),
+        "worst_time_rel_err": worst,
+        "n_reports": len(reports),
+        "n_bitwise_identical": n_bitwise,
+        "asm_sweep_max_rel_diff": worst_sweep,
+    }
+    return rows
+
+
 def dse_study(quick: bool = False, cache_path: str | None = None,
               budget_kb: float = 512.0):
     """Design-space exploration acceptance rows: enumerate a DSE space
@@ -182,7 +238,7 @@ def dse_study(quick: bool = False, cache_path: str | None = None,
     reduce to per-app Pareto frontiers + best-config-under-budget.
 
     A repeated invocation with the same ``--dse-cache`` must report >=99%
-    cache hits and an identical ``frontier_fingerprint`` in BENCH_pr4.json
+    cache hits and an identical ``frontier_fingerprint`` in the bench JSON
     (the DSE determinism contract)."""
     from repro.configs import vector_engine as vcfg
     from repro.core import dse
@@ -299,27 +355,35 @@ def main(argv=None) -> None:
                          "--dse-cache, report Pareto frontiers + cache-hit "
                          "stats (a repeat run must be >=99%% hits with an "
                          "identical frontier fingerprint)")
+    ap.add_argument("--rvv", action="store_true",
+                    help="RVV assembly frontend rows only: per-app decode "
+                         "wall-clock, asm-vs-hand cross-validation "
+                         "verdicts, and asm-variant sweep parity")
     ap.add_argument("--dse-cache", default=os.path.join(
         os.path.dirname(__file__), "..", "results", "dse_cache.jsonl"),
         help="persistent DSE result cache (JSONL)")
     ap.add_argument("--dse-budget-kb", type=float, default=512.0)
     ap.add_argument("--bench-json", default=os.path.join(
-        os.path.dirname(__file__), "..", "BENCH_pr4.json"),
+        os.path.dirname(__file__), "..", "BENCH_pr5.json"),
         help="machine-readable results path (sweep wall-clock, batched "
-             "speedup, per-app steady-state times, crossval verdict, DSE "
-             "frontiers + cache stats)")
+             "speedup, per-app steady-state times, crossval verdicts "
+             "incl. the RVV frontend, DSE frontiers + cache stats)")
     args = ap.parse_args(argv)
     if args.dse:
         fns = (lambda: dse_study(quick=args.quick,
                                  cache_path=args.dse_cache,
                                  budget_kb=args.dse_budget_kb),)
+    elif args.rvv:
+        fns = (lambda: rvv_rows(quick=args.quick),)
     elif args.quick:
         fns = (table_3_to_9_characterization, figures_4_to_10_scalability,
-               sweep_llc, sweep_mshr, frontend_crossval, steady_state_table,
+               sweep_llc, sweep_mshr, frontend_crossval,
+               lambda: rvv_rows(quick=True), steady_state_table,
                lambda: sweep_wallclock(quick=True))
     else:
         fns = (table_3_to_9_characterization, figures_4_to_10_scalability,
-               sweep_llc, sweep_mshr, frontend_crossval, steady_state_table,
+               sweep_llc, sweep_mshr, frontend_crossval,
+               lambda: rvv_rows(), steady_state_table,
                kernel_microbench, roofline_table,
                lambda: sweep_wallclock(quick=False))
     print("name,us_per_call,derived")

@@ -1,0 +1,31 @@
+# saxpy: y[i] += a * x[i] — a user kernel that is NOT part of the RiVec
+# suite, decoded and simulated end-to-end by the RVV assembly frontend:
+#
+#   PYTHONPATH=src python -m repro.core.rvv examples/rvv/saxpy.s --mvl 64
+#
+# The .stream directives declare each array's working-set footprint (KB)
+# between reuses; the analytic memory model derives miss behavior from it.
+# The strip-mine loop is executed by the decoder's abstract interpreter, so
+# the same file decodes to the right chunking at any hardware MVL (with an
+# exact partial tail VL on the last iteration).
+    .text
+    .globl saxpy
+    .stream x 512.0
+    .stream y 512.0
+saxpy:
+    li      a0, 4096            # n elements (or override with --avl)
+    la      a1, x
+    la      a2, y
+    fld     fa0, 0(sp)          # the scalar a
+loop:
+    vsetvli t0, a0, e64, m1, ta, ma
+    vle64.v v0, (a1)
+    vle64.v v1, (a2)
+    vfmacc.vf v1, fa0, v0
+    vse64.v v1, (a2)
+    slli    t1, t0, 3
+    add     a1, a1, t1
+    add     a2, a2, t1
+    sub     a0, a0, t0
+    bnez    a0, loop
+    ret

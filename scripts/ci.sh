@@ -29,6 +29,13 @@ echo "== frontend cross-validation gate =="
 # kind/FU/pattern/element/scalar mixes, steady-state time within 5%
 python -m repro.core.frontend
 
+echo "== rvv-crossval gate =="
+# the RVV assembly corpus (src/repro/asm) decoded back through
+# repro.core.rvv vs the hand-coded bodies, at EVERY mvl in {8..256}:
+# static mixes exact, steady-state time within 5%, decoder-derived chunk
+# counts against the characterized closed forms, body invariants clean
+python -m repro.core.rvv --check-all
+
 echo "== dse-smoke gate =="
 # 64-point space, single device: explore twice through a fresh on-disk
 # cache; the second pass must be 100% hits with a bitwise-identical

@@ -25,7 +25,13 @@ RTOL = 1e-2  # generous vs float32 platform jitter, tight vs real drift
 
 
 def _payload() -> dict:
-    table = suite.sweep_all()
+    """All 10 registered apps plus the 7 RVV-assembly-sourced variants
+    (trace source: src/repro/asm via repro.core.rvv) — 408 cells.  The
+    ``:asm`` cells pin the *decoder* end to end: a decode regression that
+    survives the crossval mixes still shows up as a speedup drift here."""
+    from repro.core import tracegen
+    apps = sorted(tracegen.APPS) + list(tracegen.ASM_APPS)
+    table = suite.sweep_all(apps)
     return {app: {f"{m}x{l}": round(s, 6) for (m, l), s in grid.items()}
             for app, grid in table.items()}
 

@@ -26,6 +26,13 @@ from repro.core.engine import VectorEngineConfig
 MVLS = (8, 16, 32, 64, 128, 256)
 LANES = (1, 2, 4, 8)
 
+# The RVV-assembly-sourced suite variant: the same seven RiVec apps with
+# loop bodies *decoded from src/repro/asm* (repro.core.rvv) instead of the
+# hand-coded tracegen bodies.  The ":asm" names resolve through
+# tracegen.body_for/chunks_for, so they ride suite.sweep_all, the golden
+# table and dse.explore exactly like the plain names.
+from repro.core.tracegen import ASM_APPS as ASM_SUITE  # noqa: E402
+
 TABLE10 = tuple(
     VectorEngineConfig(
         mvl=mvl, lanes=lanes, phys_regs=40, queue_entries=16,

@@ -63,7 +63,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import isa
+from repro.core import crossval, isa
 
 try:  # the public home since jax 0.4.x; jax.core kept as fallback
     from jax.extend.core import Literal as _Literal
@@ -113,8 +113,10 @@ SKIP_PRIMS = ("convert_element_type", "broadcast_in_dim", "reshape",
 CALL_PRIMS = ("pjit", "closed_call", "core_call", "custom_jvp_call",
               "custom_vjp_call", "remat", "checkpoint")
 
-N_LOGICAL_REGS = 32   # the engine's register-ready scoreboard size
-TIME_RTOL = 0.05      # cross-validation steady-state-time tolerance
+# the contract constants live in the shared cross-validation harness
+# (repro.core.crossval); re-exported here for compatibility
+N_LOGICAL_REGS = crossval.N_LOGICAL_REGS
+TIME_RTOL = crossval.TIME_RTOL
 
 
 # --------------------------------------------------------------------------
@@ -584,91 +586,31 @@ def trace_mix(trace: isa.Trace) -> dict:
     return {names[c]: float(np.sum(fus == c)) / n for c in names}
 
 
-@dataclass
-class CrossValReport:
-    app: str
-    kinds_ok: bool       # instruction-kind histogram: exact
-    fu_ok: bool          # FU histogram over VARITH: exact
-    pattern_ok: bool     # memory-pattern histogram over loads/stores: exact
-    elems_ok: bool       # summed vector length (element work): exact
-    scalar_ok: bool      # total scalar_count and dep_scalar count: exact
-    pressure_ok: bool    # fits the register file, close to hand-coded
-    hand_regs: int
-    derived_regs: int
-    time_hand: float = 0.0
-    time_derived: float = 0.0
-
-    @property
-    def time_rel_err(self) -> float:
-        return abs(self.time_derived - self.time_hand) / max(self.time_hand,
-                                                             1e-9)
-
-    @property
-    def ok(self) -> bool:
-        return (self.kinds_ok and self.fu_ok and self.pattern_ok
-                and self.elems_ok and self.scalar_ok and self.pressure_ok
-                and self.time_rel_err <= TIME_RTOL)
-
-
-def _static_report(app_name: str, hand: isa.Trace, low: Lowered) -> CrossValReport:
-    d = low.trace
-    vmask = lambda t: t.kind != isa.SCALAR_BLOCK
-    memmask = lambda t: (t.kind == isa.VLOAD) | (t.kind == isa.VSTORE)
-    kinds_ok = bool(np.array_equal(isa.kind_histogram(hand),
-                                   isa.kind_histogram(d)))
-    fu_ok = bool(np.array_equal(
-        np.bincount(hand.fu[hand.kind == isa.VARITH], minlength=4),
-        np.bincount(d.fu[d.kind == isa.VARITH], minlength=4)))
-    pattern_ok = bool(np.array_equal(
-        np.bincount(hand.mem_pattern[memmask(hand)], minlength=3),
-        np.bincount(d.mem_pattern[memmask(d)], minlength=3)))
-    elems_ok = int(hand.vl[vmask(hand)].sum()) == int(d.vl[vmask(d)].sum())
-    scalar_ok = (int(hand.scalar_count.sum()) == int(d.scalar_count.sum())
-                 and int(hand.dep_scalar.sum()) == int(d.dep_scalar.sum()))
-    hand_regs = isa.trace_registers(hand)
-    pressure_ok = (low.max_live <= N_LOGICAL_REGS
-                   and abs(low.regs_used - hand_regs) <= 16)
-    return CrossValReport(app_name, kinds_ok, fu_ok, pattern_ok, elems_ok,
-                          scalar_ok, pressure_ok, hand_regs, low.regs_used)
+# the shared contract (repro.core.crossval), re-exported for compatibility
+CrossValReport = crossval.CrossValReport
 
 
 def cross_validate_all(apps=None, cfgs=None) -> list[CrossValReport]:
     """Derived-vs-hand-coded contract for every app with both frontends;
     the timing comparison for every (app, cfg) pair runs as one batch."""
     from repro.core import engine as eng
-    from repro.core import suite, tracegen
+    from repro.core import tracegen
     if apps is None:
         apps = list(tracegen.RIVEC_APPS)
     if cfgs is None:
         cfgs = [eng.VectorEngineConfig(mvl=64, lanes=4),
                 eng.VectorEngineConfig(mvl=16, lanes=2)]
-    reports, bodies, pair_cfgs = [], [], []
-    for cfg in cfgs:
-        for app in apps:
-            eff = suite.effective_mvl(app, cfg)
-            hand = tracegen.body_for(app, eff, cfg)
-            low = derived_body(app, eff, cfg)
-            reports.append(_static_report(app, hand, low))
-            bodies += [hand, low.trace]
-            pair_cfgs += [cfg, cfg]
-    times = eng.steady_state_time_batch(bodies, pair_cfgs)
-    for r, i in zip(reports, range(0, len(times), 2)):
-        r.time_hand, r.time_derived = times[i], times[i + 1]
-    return reports
+
+    def derive(app, eff, cfg):
+        low = derived_body(app, eff, cfg)
+        return low.trace, low.regs_used, low.max_live
+
+    return crossval.cross_validate(derive, apps, cfgs)
 
 
 def main(argv=None) -> int:
-    reports = cross_validate_all()
-    print(f"{'app':16s} {'kinds':>6s} {'fu':>4s} {'mem':>4s} {'elems':>6s} "
-          f"{'scalar':>7s} {'regs h/d':>9s} {'time err':>9s}  ok")
-    ok = True
-    for r in reports:
-        ok &= r.ok
-        print(f"{r.app:16s} {str(r.kinds_ok):>6s} {str(r.fu_ok):>4s} "
-              f"{str(r.pattern_ok):>4s} {str(r.elems_ok):>6s} "
-              f"{str(r.scalar_ok):>7s} {r.hand_regs:4d}/{r.derived_regs:<4d} "
-              f"{r.time_rel_err:8.2%}  {'ok' if r.ok else 'FAIL'}")
-    print("\nfrontend cross-validation:", "CONSISTENT" if ok else "MISMATCH")
+    ok = crossval.print_reports(cross_validate_all(),
+                                "frontend cross-validation")
     return 0 if ok else 1
 
 

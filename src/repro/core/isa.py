@@ -272,6 +272,50 @@ def kind_histogram(trace: Trace) -> np.ndarray:
     return np.bincount(trace.kind, minlength=NOP + 1)
 
 
+N_ARCH_REGS = 32   # architectural vector registers (the scoreboard size)
+
+
+def validate_trace(trace: Trace, mvl: int | None = None,
+                   predefined=()) -> list[str]:
+    """Structural invariants a decoder-produced trace must satisfy.
+
+    Returns a list of problem strings (empty == valid):
+
+    * every register index in ``[0, N_ARCH_REGS)``,
+    * ``vl <= mvl`` on every vector entry (when ``mvl`` is given),
+    * no vector source register read before its first write — registers in
+      ``predefined`` (e.g. a decoded kernel's prologue definitions) count as
+      written at entry.
+
+    The RVV frontend's fuzz tier (``tests/test_rvv.py``) holds every
+    successfully decoded stream to these; the hand-coded ``tracegen`` bodies
+    intentionally do *not* satisfy the dangling-source rule (their windows
+    model registers carried across chunk iterations), so this is a decoder
+    contract, not a global ``Trace`` one.
+    """
+    problems: list[str] = []
+    regs = np.stack([trace.src1, trace.src2, trace.dst])
+    bad = (regs >= N_ARCH_REGS) | ((regs < 0) & (regs != -1))
+    if bad.any():
+        problems.append(f"register index out of [0,{N_ARCH_REGS}): "
+                        f"{sorted(set(regs[bad].tolist()))}")
+    vec = trace.kind != SCALAR_BLOCK
+    if mvl is not None and (trace.vl[vec] > mvl).any():
+        problems.append(
+            f"vl exceeds mvl={mvl}: max {int(trace.vl[vec].max())}")
+    written = set(int(r) for r in predefined)
+    for i in range(len(trace)):
+        if not vec[i]:
+            continue
+        srcs = [int(trace.src1[i]), int(trace.src2[i])]
+        for s in srcs[:max(int(trace.n_src[i]), 0)]:
+            if s >= 0 and s not in written:
+                problems.append(f"instr {i}: src v{s} read before first write")
+        if int(trace.dst[i]) >= 0:
+            written.add(int(trace.dst[i]))
+    return problems
+
+
 def scalar_block(count: int, fu: int = FU_SIMPLE, dep_scalar: bool = False) -> dict:
     return dict(kind=SCALAR_BLOCK, scalar_count=int(round(count)), fu=fu,
                 dep_scalar=dep_scalar)

@@ -58,16 +58,18 @@ def effective_mvl(app_name: str, cfg: eng.VectorEngineConfig) -> int:
     app's largest requested VL.  Both the loop-body trace and the chunk
     count use this one value (they previously disagreed: bodies were built
     at the raw ``cfg.mvl`` while ``chunks`` clamped)."""
-    return min(cfg.mvl, tracegen.APPS[app_name].max_vl)
+    return min(cfg.mvl, tracegen.app_for(app_name).max_vl)
 
 
 def scalar_runtime_ns(app_name: str) -> float:
     """Modeled scalar-version runtime (ns).
 
     work elements get the app's FU-class mix; the remaining instructions
-    (control/addressing) are simple-class.
+    (control/addressing) are simple-class.  Trace-source variants
+    (``"<app>:asm"``) share the base app's scalar baseline — the scalar
+    version of the program is the same either way.
     """
-    app = tracegen.APPS[app_name]
+    app = tracegen.app_for(app_name)
     counts = app.counts(8)
     work = counts.vector_ops          # element ops at MVL=8 (min overhead)
     overhead = max(counts.scalar_code_total - work, 0.0)
@@ -76,13 +78,13 @@ def scalar_runtime_ns(app_name: str) -> float:
     t = overhead * eng.SCALAR_CYCLES[0] * scale
     for i, c in enumerate(classes):
         t += work * app.mix.get(c, 0.0) * eng.SCALAR_CYCLES[i] * scale
-    return float(t) * SCALAR_BASELINE_MULT.get(app_name, 1.0)
+    return float(t) * SCALAR_BASELINE_MULT.get(app.name, 1.0)
 
 
 def _vector_runtime_from_per_chunk(app_name: str, cfg: eng.VectorEngineConfig,
                                    body, per_chunk: float) -> float:
-    app = tracegen.APPS[app_name]
-    chunks = app.chunks(effective_mvl(app_name, cfg))
+    app = tracegen.app_for(app_name)
+    chunks = tracegen.chunks_for(app_name, effective_mvl(app_name, cfg), cfg)
     counts = app.counts(cfg.mvl)
     # residual scalar work not amortized per chunk (s0-like constant part)
     per_chunk_scalar = sum(

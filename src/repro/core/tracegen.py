@@ -66,6 +66,10 @@ class App:
     # pattern mix, same element and scalar work, steady-state time within
     # frontend.TIME_RTOL); for frontend-only workloads it IS the body.
     kernel: Callable[[int, "object"], list] = None
+    # RVV assembly corpus entry (filename under src/repro/asm): the third
+    # trace source, decoded by repro.core.rvv and cross-validated against
+    # `body` exactly like `kernel` (python -m repro.core.rvv --check-all)
+    asm: str = None
 
 
 def _arith_seq(n, mix, vl, start_reg=4):
@@ -620,32 +624,68 @@ APPS = {
     "blackscholes": App("blackscholes", _bs_counts, _bs_body,
                         lambda mvl: _BS_UNITS / mvl, _BS_MIX,
                         init_scalar=573_256_509, kernel=_bs_kernel,
+                        asm="blackscholes.s",
                         notes="regular DLP; PDE pricing; Table 3 / Fig 4"),
     "canneal": App("canneal", _ca_counts, _ca_body, _ca_chunks, _CA_MIX,
-                   max_vl=22, kernel=_ca_kernel,
+                   max_vl=22, kernel=_ca_kernel, asm="canneal.s",
                    notes="irregular DLP; indexed loads; Table 4 / Fig 5"),
     "jacobi-2d": App("jacobi-2d", _j2_counts, _j2_body,
                      lambda mvl: _J2_CHUNK8 * 8 / mvl, _J2_MIX,
-                     kernel=_j2_kernel,
+                     kernel=_j2_kernel, asm="jacobi2d.s",
                      notes="stencil; slides stress interconnect; Table 5 / Fig 6"),
     "particlefilter": App("particlefilter", _pf_counts, _pf_body, _pf_chunks,
-                          _PF_MIX, kernel=_pf_kernel,
+                          _PF_MIX, kernel=_pf_kernel, asm="particlefilter.s",
                           notes="mask ops stall scalar core; Table 6 / Fig 7"),
     "pathfinder": App("pathfinder", _path_counts, _path_body,
                       lambda mvl: _PATH_CHUNK8 * 8 / mvl, {"simple": 1.0},
-                      kernel=_path_kernel,
+                      kernel=_path_kernel, asm="pathfinder.s",
                       notes="26% element-manip instrs; Table 7 / Fig 8"),
     "streamcluster": App("streamcluster", _sc_counts, _sc_body, _sc_chunks,
                          _SC_MIX, max_vl=_SC_DIMS, kernel=_sc_kernel,
+                         asm="streamcluster.s",
                          notes="memory bound; reduction/call; Table 8 / Fig 9"),
     "swaptions": App("swaptions", _sw_counts, _sw_body, _sw_chunks, _SW_MIX,
-                     kernel=_sw_kernel,
+                     kernel=_sw_kernel, asm="swaptions.s",
                      notes="HJM Monte-Carlo; LLC sensitivity; Table 9 / Fig 10"),
 }
 
 # The paper's RiVec suite: both frontends exist and must cross-validate
 # (repro.core.frontend.cross_validate_all).
 RIVEC_APPS = tuple(sorted(APPS))
+
+# ---------------------------------------------------------------------------
+# trace-source variants: "<app>:asm" names the same app with its loop body
+# decoded from the RVV assembly corpus (src/repro/asm, repro.core.rvv)
+# instead of the hand-coded `body`.  The suite/DSE layers resolve names
+# through `app_for`/`body_for`/`chunks_for`, so asm-sourced apps ride
+# `sweep_all`, the golden table and `dse.explore` unchanged.
+# ---------------------------------------------------------------------------
+
+ASM_SUFFIX = ":asm"
+
+
+def split_variant(app_name: str) -> tuple[str, str]:
+    """``"canneal:asm" -> ("canneal", "asm")``; plain names are "hand"."""
+    if app_name.endswith(ASM_SUFFIX):
+        return app_name[:-len(ASM_SUFFIX)], "asm"
+    return app_name, "hand"
+
+
+def app_for(app_name: str) -> App:
+    """The registry entry backing a (possibly variant-suffixed) app name."""
+    return APPS[split_variant(app_name)[0]]
+
+
+def chunks_for(app_name: str, mvl: int, cfg=None) -> float:
+    """Loop-body executions at this MVL.  For ``:asm`` variants the count is
+    *derived from the decoded kernel* (its AVL / loop counter), not the
+    closed form — the two agree to ~1e-8 (the .s AVLs are the rounded
+    characterized totals)."""
+    base, source = split_variant(app_name)
+    if source == "asm":
+        from repro.core import rvv
+        return rvv.asm_chunks(base, mvl, cfg)
+    return APPS[base].chunks(mvl)
 
 # Frontend-only ML workloads (no hand-coded bodies: the lowered kernel IS
 # the body) — registered here so the whole toolchain (suite sweeps, golden
@@ -662,9 +702,22 @@ _BODY_CACHE: dict = {}
 
 
 def body_for(app_name: str, mvl: int, cfg=None) -> Trace:
-    """Cached ``APPS[app_name].body(mvl, cfg)`` (callers must not mutate)."""
+    """Cached loop-body trace for a (possibly variant-suffixed) app name:
+    ``APPS[name].body(mvl, cfg)``, or the decoded RVV corpus body for
+    ``"<name>:asm"`` (callers must not mutate)."""
     key = (app_name, mvl, cfg)
     out = _BODY_CACHE.get(key)
     if out is None:
-        out = _BODY_CACHE[key] = APPS[app_name].body(mvl, cfg)
+        base, source = split_variant(app_name)
+        if source == "asm":
+            from repro.core import rvv
+            out = rvv.asm_body(base, mvl, cfg)
+        else:
+            out = APPS[base].body(mvl, cfg)
+        _BODY_CACHE[key] = out
     return out
+
+
+# The asm-sourced suite variant (rides sweep_all / dse.explore / the golden
+# table): every RiVec app whose corpus entry exists.
+ASM_APPS = tuple(f"{a}{ASM_SUFFIX}" for a in RIVEC_APPS if APPS[a].asm)

@@ -1,0 +1,84 @@
+"""Smoke coverage for the benchmark drivers that had no test tier:
+``benchmarks/roofline_report.py`` (pure table rendering from results JSONL)
+and ``benchmarks/futurework_study.py`` (the beyond-paper knob study, now
+batched through ``suite.speedup_batch``)."""
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import futurework_study, roofline_report  # noqa: E402
+
+
+# ----------------------------------------------------- futurework_study
+
+def test_futurework_study_quick_table():
+    table = futurework_study.study(
+        apps=["blackscholes", "canneal"],
+        variants={"baseline(in-order,ring,1rp,1mp)": {},
+                  "all_upgrades": {"ooo_issue": True,
+                                   "interconnect": "crossbar",
+                                   "vrf_read_ports": 3, "mem_ports": 2}})
+    base = table["baseline(in-order,ring,1rp,1mp)"]
+    assert all(v == 1.0 for v in base.values())
+    for row in table.values():
+        for v in row.values():
+            assert np.isfinite(v) and v > 0
+    # upgrading every §3 knob never slows an app down at the reference point
+    assert all(v >= 0.999 for v in table["all_upgrades"].values())
+
+
+def test_futurework_study_baseline_found_by_name_not_order():
+    a = futurework_study.study(
+        apps=["canneal"],
+        variants={"baseline(in-order,ring,1rp,1mp)": {},
+                  "all_upgrades": {"ooo_issue": True, "vrf_read_ports": 3}})
+    b = futurework_study.study(
+        apps=["canneal"],
+        variants={"all_upgrades": {"ooo_issue": True, "vrf_read_ports": 3},
+                  "baseline(in-order,ring,1rp,1mp)": {}})
+    assert a["all_upgrades"]["canneal"] == b["all_upgrades"]["canneal"]
+    assert b["baseline(in-order,ring,1rp,1mp)"]["canneal"] == 1.0
+
+
+def test_futurework_study_main_quick(capsys):
+    assert futurework_study.main(["--quick"]) == 0
+    out = capsys.readouterr().out
+    assert "variant" in out and "ooo_issue" in out
+
+
+# ----------------------------------------------------- roofline_report
+
+_ROW = {
+    "arch": "dense", "shape": "8b", "mesh": "16x16",
+    "compile_s": 12.5,
+    "per_device": {"hbm_used_bytes": 9 * 2 ** 30, "fits_16GB": True,
+                   "flops": 1.2e12, "ici_bytes": 3.4e9},
+    "roofline": {"t_compute_s": 0.51, "t_memory_s": 0.21,
+                 "t_collective_s": 0.11, "bound": "compute",
+                 "useful_ratio": 0.92, "roofline_fraction": 0.8123},
+}
+
+
+def test_roofline_report_renders_tables(tmp_path, capsys):
+    other = dict(_ROW, mesh="8x8")         # filtered from the roofline table
+    tagged = dict(_ROW, tag="hillclimb")   # filtered from the dry-run table
+    with open(tmp_path / "dryrun.jsonl", "w") as f:
+        for r in (_ROW, other, tagged):
+            f.write(json.dumps(r) + "\n")
+    assert roofline_report.main(["--results", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "| dense | 8b | 16x16 | 12.5 | 9.00 | yes |" in out
+    assert "| dense | 8b | 0.51 | 0.21 | 0.11 | compute | 0.92 | 0.8123 |" \
+        in out
+    # the dry-run table lists both meshes, the roofline table only 16x16
+    assert out.count("| dense | 8b |") == 3
+
+
+def test_roofline_report_handles_missing_results(tmp_path, capsys):
+    assert roofline_report.main(["--results", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "Dry-run table" in out and "Roofline" in out

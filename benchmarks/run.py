@@ -26,7 +26,7 @@ def _t(fn, *args, reps=3):
 
 
 # machine-readable results collected while the driver runs; main() writes
-# them to --bench-json (BENCH_pr5.json by default)
+# them to --bench-json (BENCH_pr6.json by default)
 _BENCH: dict = {}
 
 
@@ -272,6 +272,22 @@ def dse_study(quick: bool = False, cache_path: str | None = None,
     return rows
 
 
+def serve_rows(quick: bool = False, cache_path: str | None = None,
+               seed: int = 0):
+    """Simulation-service acceptance rows: sustained throughput and p50/p99
+    latency under a (seeded) Poisson arrival workload with zero steady-state
+    recompiles; the repeated identical stream must answer >= 99 % of
+    requests from the ResultCache with bitwise-identical times."""
+    try:
+        from benchmarks import serve_bench
+    except ImportError:
+        import serve_bench
+    rows, bench = serve_bench.serve_study(quick=quick, cache_path=cache_path,
+                                          seed=seed)
+    _BENCH["serve"] = bench
+    return rows
+
+
 def kernel_microbench():
     from repro.kernels import ops
     k = jax.random.key
@@ -359,20 +375,33 @@ def main(argv=None) -> None:
                     help="RVV assembly frontend rows only: per-app decode "
                          "wall-clock, asm-vs-hand cross-validation "
                          "verdicts, and asm-variant sweep parity")
+    ap.add_argument("--serve", action="store_true",
+                    help="simulation-service rows only: Poisson arrival "
+                         "workload through repro.serve.sim_service — "
+                         "sustained throughput, p50/p99 latency, zero "
+                         "steady-state recompiles; the repeat pass must be "
+                         ">=99%% ResultCache hits, bitwise-identical")
     ap.add_argument("--dse-cache", default=os.path.join(
         os.path.dirname(__file__), "..", "results", "dse_cache.jsonl"),
         help="persistent DSE result cache (JSONL)")
+    ap.add_argument("--serve-cache", default=os.path.join(
+        os.path.dirname(__file__), "..", "results", "serve_cache.jsonl"),
+        help="persistent simulation-service result cache (JSONL)")
     ap.add_argument("--dse-budget-kb", type=float, default=512.0)
     ap.add_argument("--bench-json", default=os.path.join(
-        os.path.dirname(__file__), "..", "BENCH_pr5.json"),
+        os.path.dirname(__file__), "..", "BENCH_pr6.json"),
         help="machine-readable results path (sweep wall-clock, batched "
              "speedup, per-app steady-state times, crossval verdicts "
-             "incl. the RVV frontend, DSE frontiers + cache stats)")
+             "incl. the RVV frontend, DSE frontiers + cache stats, "
+             "serving throughput/latency)")
     args = ap.parse_args(argv)
     if args.dse:
         fns = (lambda: dse_study(quick=args.quick,
                                  cache_path=args.dse_cache,
                                  budget_kb=args.dse_budget_kb),)
+    elif args.serve:
+        fns = (lambda: serve_rows(quick=args.quick,
+                                  cache_path=args.serve_cache),)
     elif args.rvv:
         fns = (lambda: rvv_rows(quick=args.quick),)
     elif args.quick:

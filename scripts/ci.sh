@@ -14,7 +14,8 @@ python -m pytest -x -q -p no:randomly
 
 echo "== docs gate: doctests =="
 python -m pytest --doctest-modules -q -p no:randomly \
-  src/repro/core/memory.py src/repro/core/suite.py src/repro/core/dse.py
+  src/repro/core/memory.py src/repro/core/suite.py src/repro/core/dse.py \
+  src/repro/serve/sim_service.py
 
 echo "== docs gate: README snippets =="
 # extract EVERY ```python fenced block from the README and execute them in
@@ -43,6 +44,15 @@ echo "== dse-smoke gate =="
 dse_tmp="$(mktemp -d)"
 trap 'rm -f "$snippet"; rm -rf "$dse_tmp"' EXIT
 python -m repro.core.dse --space smoke --cache "$dse_tmp/cache.jsonl" --smoke
+
+echo "== serve-smoke gate =="
+# simulation service: short Poisson request stream through a fresh on-disk
+# cache — prewarmed pass must not recompile at steady state; the repeated
+# identical stream must be >=99% ResultCache hits with bitwise-identical
+# times (the serving determinism contract)
+serve_tmp="$(mktemp -d)"
+trap 'rm -f "$snippet"; rm -rf "$dse_tmp" "$serve_tmp"' EXIT
+python -m repro.serve.sim_service --smoke --cache "$serve_tmp/cache.jsonl"
 
 echo "== quick benchmark smoke =="
 python benchmarks/run.py --quick

@@ -37,9 +37,15 @@ from __future__ import annotations
 import itertools
 import json
 import os
+import warnings
 from dataclasses import dataclass, fields
 
 import numpy as np
+
+try:
+    import fcntl
+except ImportError:          # non-POSIX: advisory locking degrades to none
+    fcntl = None
 
 from repro.core import engine as eng
 from repro.core import isa, tracegen
@@ -166,6 +172,15 @@ class ResultCache:
     Values are floats serialized by ``json`` at full precision, so a cached
     sweep reproduces the simulated one byte-for-byte.  ``path=None`` gives a
     process-local (in-memory) cache.
+
+    Robustness (the serve layer's crash-safety contract):
+
+    * loading tolerates malformed lines — a process killed mid-append leaves
+      at most one truncated trailing record, which is skipped with a warning
+      (``corrupt_lines`` counts them) instead of poisoning the whole cache;
+    * ``flush`` writes all pending records as ONE ``O_APPEND`` write under an
+      advisory ``flock``, so concurrent writers (two ``--dse`` runs, or the
+      simulation service and a sweep) never interleave partial lines.
     """
 
     def __init__(self, path: str | None = None):
@@ -174,13 +189,22 @@ class ResultCache:
         self._pending: list[tuple[str, float]] = []
         self.hits = 0
         self.misses = 0
+        self.corrupt_lines = 0
         if path and os.path.exists(path):
             with open(path) as f:
-                for line in f:
+                for lineno, line in enumerate(f, 1):
                     line = line.strip()
-                    if line:
+                    if not line:
+                        continue
+                    try:
                         rec = json.loads(line)
-                        self._mem[rec["k"]] = rec["v"]
+                        self._mem[rec["k"]] = float(rec["v"])
+                    except (json.JSONDecodeError, KeyError, TypeError,
+                            ValueError):
+                        self.corrupt_lines += 1
+                        warnings.warn(
+                            f"ResultCache: skipping malformed line {lineno} "
+                            f"of {path} (truncated write?)", stacklevel=2)
 
     def __len__(self) -> int:
         return len(self._mem)
@@ -205,20 +229,86 @@ class ResultCache:
             self._pending.append((key, float(value)))
 
     def flush(self) -> None:
-        """Append new entries to disk (no-op for in-memory caches)."""
+        """Append new entries to disk (no-op for in-memory caches).
+
+        All pending records are buffered into one payload and appended with a
+        single ``write`` on an ``O_APPEND`` descriptor under an exclusive
+        advisory ``flock``: concurrent flushers serialize whole-payload, so
+        the JSONL can never interleave partial lines, and a crash mid-write
+        leaves at most one truncated trailing line (which ``__init__``
+        skips).
+        """
         if self.path and self._pending:
             d = os.path.dirname(self.path)
             if d:
                 os.makedirs(d, exist_ok=True)
-            with open(self.path, "a") as f:
-                for k, v in self._pending:
-                    f.write(json.dumps({"k": k, "v": v}) + "\n")
+            payload = "".join(json.dumps({"k": k, "v": v}) + "\n"
+                              for k, v in self._pending).encode()
+            fd = os.open(self.path,
+                         os.O_RDWR | os.O_CREAT | os.O_APPEND, 0o644)
+            try:
+                if fcntl is not None:
+                    fcntl.flock(fd, fcntl.LOCK_EX)
+                # a crashed writer may have left an unterminated trailing
+                # line; terminate it so the new records don't merge into it
+                size = os.fstat(fd).st_size
+                if size and os.pread(fd, 1, size - 1) != b"\n":
+                    payload = b"\n" + payload
+                os.write(fd, payload)
+            finally:
+                if fcntl is not None:
+                    fcntl.flock(fd, fcntl.LOCK_UN)
+                os.close(fd)
         self._pending.clear()
 
     @property
     def hit_rate(self) -> float:
         n = self.hits + self.misses
         return self.hits / n if n else 0.0
+
+
+# --------------------------------------------------------------------------
+# cell keying — the contract shared by explore() and the serve layer
+# --------------------------------------------------------------------------
+
+# Every body/kernel consumes cfg only through cfg.mvl (the clamp), so bodies
+# and their fingerprints memoize on (app, eff_mvl, cfg.mvl) — a SPACE_FULL
+# sweep (or a long-lived service) builds ~tens of distinct bodies, not one
+# per cell.  Config fingerprints memoize on the frozen config itself.
+_BODY_FPS: dict[tuple, tuple] = {}
+_CFG_FPS: dict = {}
+
+
+def cell_body(app: str, cfg: eng.VectorEngineConfig) -> tuple:
+    """Memoized ``(body, trace_fingerprint)`` for one (app, config) cell."""
+    from repro.core import suite
+    eff = suite.effective_mvl(app, cfg)
+    bkey = (app, eff, cfg.mvl)
+    ent = _BODY_FPS.get(bkey)
+    if ent is None:
+        body = tracegen.body_for(app, eff, cfg)
+        ent = _BODY_FPS[bkey] = (body, isa.trace_fingerprint(body))
+    return ent
+
+
+def config_fp(cfg: eng.VectorEngineConfig) -> str:
+    """Memoized ``engine.config_fingerprint`` (cfg is frozen/hashable)."""
+    fp = _CFG_FPS.get(cfg)
+    if fp is None:
+        fp = _CFG_FPS[cfg] = eng.config_fingerprint(cfg)
+    return fp
+
+
+def cell_key(app: str, cfg: eng.VectorEngineConfig, warmup: int = 8,
+             measure: int = 24, model_fp: str | None = None) -> tuple:
+    """``(body, cache key)`` for one (app, config) cell — the single keying
+    contract shared by :func:`explore` and ``repro.serve.sim_service``, so a
+    service answer and a sweep answer for the same cell are the same cache
+    entry.  ``model_fp`` may be passed to amortize ``model_fingerprint()``
+    over a loop."""
+    body, trace_fp = cell_body(app, cfg)
+    mfp = model_fp if model_fp is not None else eng.model_fingerprint()
+    return body, f"{mfp}|{trace_fp}|{config_fp(cfg)}|w{warmup}m{measure}"
 
 
 # --------------------------------------------------------------------------
@@ -275,27 +365,13 @@ def explore(space, apps=None, cache: ResultCache | None = None,
     cache = cache if cache is not None else ResultCache()
 
     h0, m0 = cache.hits, cache.misses
-    # Every body/kernel consumes cfg only through cfg.mvl (the clamp), so
-    # bodies and their fingerprints memoize on (app, eff_mvl, cfg.mvl) —
-    # a SPACE_FULL sweep builds ~tens of distinct bodies, not one per cell.
     model_fp = eng.model_fingerprint()
-    bodies: dict[tuple, tuple] = {}
-    cfg_fps: dict = {}
     cells = []                       # (app, cfg, body, key)
     need: dict[str, tuple] = {}      # first (body, cfg) per missing key
     for app in apps:
         for cfg in cfgs:
-            eff = suite.effective_mvl(app, cfg)
-            bkey = (app, eff, cfg.mvl)
-            ent = bodies.get(bkey)
-            if ent is None:
-                body = tracegen.body_for(app, eff, cfg)
-                ent = bodies[bkey] = (body, isa.trace_fingerprint(body))
-            body, trace_fp = ent
-            cfp = cfg_fps.get(cfg)
-            if cfp is None:
-                cfp = cfg_fps[cfg] = eng.config_fingerprint(cfg)
-            key = f"{model_fp}|{trace_fp}|{cfp}|w{warmup}m{measure}"
+            body, key = cell_key(app, cfg, warmup, measure,
+                                 model_fp=model_fp)
             cells.append((app, cfg, body, key))
             if cache.get(key) is None and key not in need:
                 need[key] = (body, cfg)
@@ -311,8 +387,8 @@ def explore(space, apps=None, cache: ResultCache | None = None,
     records = []
     for app, cfg, body, key in cells:
         per_chunk = cache._mem[key]
-        runtime = suite._vector_runtime_from_per_chunk(app, cfg, body,
-                                                       per_chunk)
+        runtime = suite.vector_runtime_from_per_chunk(app, cfg, body,
+                                                      per_chunk)
         records.append(DseRecord(
             app=app, label=cfg.label(), cfg=cfg, steady_ns=per_chunk,
             runtime_ns=runtime, speedup=scalar[app] / runtime,

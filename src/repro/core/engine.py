@@ -434,6 +434,24 @@ def _len_bucket(n: int) -> int:
     return max(CHUNK, -(-n // CHUNK) * CHUNK)
 
 
+def batch_bucket(n: int) -> int:
+    """The power-of-two batch bucket a batch of ``n`` (trace, config) pairs
+    pads to.  Together with ``CHUNK`` this is the *only* jit-compilation key
+    of the batched path — the contract the serve layer
+    (``repro.serve.sim_service``) builds on: prewarm one executable per
+    bucket up to the service's ``max_batch`` and steady-state serving never
+    recompiles."""
+    return _pow2_bucket(n)
+
+
+def trace_len_bucket(n: int) -> int:
+    """The CHUNK-multiple length bucket a trace of ``n`` entries pads to.
+    A longer trace costs more chunk *dispatches* (bucket // CHUNK), never a
+    recompile — which is why request coalescing only needs to group by batch
+    bucket, not by workload."""
+    return _len_bucket(n)
+
+
 def jit_cache_size() -> int:
     """Number of engine executables compiled so far (sequential + batched),
     or -1 when the installed JAX doesn't expose jit cache introspection

@@ -81,8 +81,16 @@ def scalar_runtime_ns(app_name: str) -> float:
     return float(t) * SCALAR_BASELINE_MULT.get(app.name, 1.0)
 
 
-def _vector_runtime_from_per_chunk(app_name: str, cfg: eng.VectorEngineConfig,
-                                   body, per_chunk: float) -> float:
+def vector_runtime_from_per_chunk(app_name: str, cfg: eng.VectorEngineConfig,
+                                  body, per_chunk: float) -> float:
+    """Whole-app modeled vector runtime from one cached/steady per-chunk time:
+    ``chunks x per_chunk`` plus the residual (non-amortized) scalar work.
+
+    This is the derivation half of the suite's timing pipeline — pure
+    arithmetic over the (app, cfg, body) cell, shared by ``speedup_batch``,
+    ``dse.explore`` and the simulation service so cached and simulated
+    answers agree bitwise.
+    """
     app = tracegen.app_for(app_name)
     chunks = tracegen.chunks_for(app_name, effective_mvl(app_name, cfg), cfg)
     counts = app.counts(cfg.mvl)
@@ -93,10 +101,14 @@ def _vector_runtime_from_per_chunk(app_name: str, cfg: eng.VectorEngineConfig,
     return float(chunks * per_chunk + residual * eng.SCALAR_CYCLES[0] * 0.25)
 
 
+# back-compat alias (pre-PR-6 name)
+_vector_runtime_from_per_chunk = vector_runtime_from_per_chunk
+
+
 def vector_runtime_ns(app_name: str, cfg: eng.VectorEngineConfig) -> float:
     body = tracegen.body_for(app_name, effective_mvl(app_name, cfg), cfg)
     per_chunk = eng.steady_state_time(body, cfg)
-    return _vector_runtime_from_per_chunk(app_name, cfg, body, per_chunk)
+    return vector_runtime_from_per_chunk(app_name, cfg, body, per_chunk)
 
 
 def speedup(app_name: str, cfg: eng.VectorEngineConfig) -> float:
@@ -110,7 +122,7 @@ def speedup_batch(pairs: list[tuple[str, eng.VectorEngineConfig]]) -> list[float
     bodies = [tracegen.body_for(a, effective_mvl(a, c), c) for a, c in pairs]
     per_chunk = eng.steady_state_time_batch(bodies, [c for _, c in pairs])
     scalar = {a: scalar_runtime_ns(a) for a in {a for a, _ in pairs}}
-    return [scalar[a] / _vector_runtime_from_per_chunk(a, c, b, pc)
+    return [scalar[a] / vector_runtime_from_per_chunk(a, c, b, pc)
             for (a, c), b, pc in zip(pairs, bodies, per_chunk)]
 
 

@@ -1,0 +1,25 @@
+"""Serving layers: LLM continuous batching (`engine`) and
+simulation-as-a-service over the vector-engine timing model
+(`sim_service`).
+
+Submodules are imported lazily so ``python -m repro.serve.sim_service``
+doesn't double-import the module it is executing, and importing one layer
+doesn't pay for the other.
+"""
+_EXPORTS = {
+    "Request": "engine", "ServeEngine": "engine", "serve_batch": "engine",
+    "Arrival": "sim_service", "ServeReport": "sim_service",
+    "SimRequest": "sim_service", "SimResult": "sim_service",
+    "SimService": "sim_service", "poisson_arrivals": "sim_service",
+    "run_workload": "sim_service",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.serve' has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(f"repro.serve.{mod}"), name)

@@ -1,10 +1,16 @@
 """Batched serving engine: continuous-batching prefill/decode driver.
 
 Requests queue up; the engine prefills prompts into KV-cache slots, then
-decodes the batch in lock-step, retiring finished sequences and backfilling
-from the queue (continuous batching at wave granularity).  All device work
-goes through the jitted prefill/decode steps, so the same engine drives a
-smoke model on CPU and the production mesh on TPU.
+decodes the batch in lock-step, retiring each sequence as soon as it reaches
+its own token budget and backfilling its slot from the queue (continuous
+batching at retire granularity).  All device work goes through the jitted
+prefill/decode steps, so the same engine drives a smoke model on CPU and the
+production mesh on TPU.
+
+The same retire-and-backfill wave structure drives the repo's
+*simulation-as-a-service* layer (``repro.serve.sim_service``), where the
+"model" is the vector-engine timing scan and a "request" is an
+(app, config) simulation cell.
 """
 from __future__ import annotations
 
@@ -51,7 +57,23 @@ def serve_batch(model, params, prompts, max_new_tokens: int, max_seq: int,
 
 
 class ServeEngine:
-    """Wave-granularity continuous batching over `serve_batch`."""
+    """Continuous batching over the prefill/decode model API.
+
+    ``run()`` keeps up to ``batch_size`` active slots.  A sequence retires
+    the moment it reaches its *own* ``max_new_tokens`` and its slot is
+    backfilled from the FIFO queue — no slot ever decodes past its budget
+    (the pre-fix wave barrier decoded ``max(max_new_tokens)`` lock-step for
+    every wave member and padded short waves with duplicate prompts treated
+    as work).
+
+    Because ``decode_step`` advances all slots at one shared position, a
+    backfill round re-prefills the active set (each prompt plus the tokens
+    it has generated so far): prompt processing is a single batched pass,
+    so a round costs one prefill + ``min(remaining budgets)`` decode steps.
+    Dead slots (when fewer than ``batch_size`` sequences are active) are
+    shape padding only — their outputs are never read.  ``decode_steps`` /
+    ``prefill_rounds`` expose the work actually done.
+    """
 
     def __init__(self, model, params, batch_size: int, max_seq: int,
                  extra: dict | None = None):
@@ -62,22 +84,58 @@ class ServeEngine:
         self.extra = extra
         self.queue: list[Request] = []
         self.finished: list[Request] = []
+        self.decode_steps = 0
+        self.prefill_rounds = 0
+        self._decode = jax.jit(model.decode_step)
 
     def submit(self, req: Request):
         self.queue.append(req)
 
+    def _retire(self, active: list[Request]) -> None:
+        for r in [r for r in active
+                  if len(r.out_tokens) >= r.max_new_tokens]:
+            r.done = True
+            self.finished.append(r)
+            active.remove(r)
+
+    def _round(self, active: list[Request]) -> None:
+        """One continuous-batching round: prefill prompt+generated for every
+        active slot, then decode until the first slot exhausts its budget."""
+        prompts = [np.concatenate([np.asarray(r.prompt, np.int32),
+                                   np.asarray(r.out_tokens, np.int32)])
+                   for r in active]
+        steps = min(r.max_new_tokens - len(r.out_tokens) for r in active)
+        padded = prompts + [prompts[0]] * (self.B - len(prompts))
+        S = max(len(p) for p in padded)
+        toks = np.zeros((self.B, S), np.int32)
+        for i, p in enumerate(padded):
+            toks[i, S - len(p):] = p                  # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.extra:
+            batch.update(self.extra)
+        logits, cache = self.model.prefill(self.params, batch, self.max_seq)
+        self.prefill_rounds += 1
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        pos = S if self.model.cfg.family != "vlm" else \
+            S + self.model.cfg.num_patches
+        for t in range(steps):
+            for i, r in enumerate(active):
+                r.out_tokens.append(int(tok[i, 0]))
+            if t == steps - 1:
+                break
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.int32(pos + t))
+            self.decode_steps += 1
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+
     def run(self) -> list[Request]:
-        while self.queue:
-            wave = self.queue[:self.B]
-            self.queue = self.queue[self.B:]
-            prompts = [r.prompt for r in wave]
-            while len(prompts) < self.B:          # pad the wave
-                prompts.append(wave[0].prompt)
-            steps = max(r.max_new_tokens for r in wave)
-            outs = serve_batch(self.model, self.params, prompts, steps,
-                               self.max_seq, self.extra)
-            for r, o in zip(wave, outs):
-                r.out_tokens = o[:r.max_new_tokens]
-                r.done = True
-                self.finished.append(r)
+        active: list[Request] = []
+        while self.queue or active:
+            while self.queue and len(active) < self.B:   # backfill FIFO
+                active.append(self.queue.pop(0))
+            self._retire(active)          # handles max_new_tokens == 0 too
+            if not active:
+                continue
+            self._round(active)
+            self._retire(active)
         return self.finished

@@ -106,6 +106,85 @@ def test_result_cache_roundtrip_and_stats(tmp_path):
     assert dse.ResultCache(path).get("k2") == 3.0000000000000004
 
 
+def test_result_cache_skips_corrupt_trailing_line(tmp_path):
+    """A process killed mid-append leaves a truncated trailing JSONL line;
+    loading must skip it with a warning, not crash (the PR-6 crash-safety
+    regression)."""
+    import warnings
+    path = str(tmp_path / "cache.jsonl")
+    c = dse.ResultCache(path)
+    c.put("k1", 1.5)
+    c.put("k2", 2.5)
+    c.flush()
+    with open(path, "a") as f:
+        f.write('{"k": "k3", "v": 3.')      # truncated mid-flush
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        c2 = dse.ResultCache(path)
+    assert any("malformed" in str(x.message) for x in w)
+    assert c2.corrupt_lines == 1
+    assert len(c2) == 2                     # intact records survive
+    assert c2.get("k1") == 1.5 and c2.get("k2") == 2.5
+    # appending after recovery still round-trips
+    c2.put("k4", 4.5)
+    c2.flush()
+    assert dse.ResultCache(path).get("k4") == 4.5
+
+
+def test_result_cache_tolerates_non_record_lines(tmp_path):
+    path = str(tmp_path / "cache.jsonl")
+    with open(path, "w") as f:
+        f.write('{"not_k": 1}\n')           # valid JSON, wrong schema
+        f.write('[1, 2, 3]\n')              # not an object
+        f.write('{"k": "good", "v": 7.0}\n')
+    import warnings
+    with warnings.catch_warnings(record=True):
+        warnings.simplefilter("always")
+        c = dse.ResultCache(path)
+    assert c.corrupt_lines == 2 and c.get("good") == 7.0
+
+
+def test_result_cache_concurrent_flush_never_interleaves(tmp_path):
+    """Many writers appending concurrently to one JSONL: every line must
+    still parse and every record must survive (the single locked O_APPEND
+    write contract)."""
+    from concurrent.futures import ThreadPoolExecutor
+    path = str(tmp_path / "cache.jsonl")
+    n_writers, n_each = 8, 50
+
+    def writer(w):
+        c = dse.ResultCache(path)
+        for i in range(n_each):
+            # long-ish keys make torn writes visible if they ever happen
+            c.put(f"writer{w}_rec{i}_" + "x" * 64, float(w * 1000 + i))
+            if i % 7 == 0:
+                c.flush()
+        c.flush()
+
+    with ThreadPoolExecutor(n_writers) as ex:
+        list(ex.map(writer, range(n_writers)))
+
+    merged = dse.ResultCache(path)
+    assert merged.corrupt_lines == 0
+    assert len(merged) == n_writers * n_each
+    for w in range(n_writers):
+        for i in range(n_each):
+            assert merged.get(f"writer{w}_rec{i}_" + "x" * 64) == float(
+                w * 1000 + i)
+
+
+def test_cell_key_matches_result_cache_key():
+    """dse.cell_key (the serve layer's entry point) and ResultCache.key (the
+    documented contract) must produce the same key for the same cell."""
+    from repro.core import suite, tracegen
+    cfg = eng.VectorEngineConfig(mvl=64, lanes=4)
+    body, key = dse.cell_key("blackscholes", cfg, 8, 24)
+    eff = suite.effective_mvl("blackscholes", cfg)
+    ref_body = tracegen.body_for("blackscholes", eff, cfg)
+    assert key == dse.ResultCache.key(ref_body, cfg, 8, 24)
+    assert len(body) == len(ref_body)
+
+
 def test_cache_key_separates_workloads_and_configs():
     from repro.core import tracegen
     cfg = eng.VectorEngineConfig(mvl=64, lanes=4)

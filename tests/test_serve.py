@@ -2,10 +2,19 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models import build
 from repro.serve.engine import Request, ServeEngine, serve_batch
+
+
+@pytest.fixture(scope="module")
+def qwen_smoke():
+    cfg = get_config("qwen2.5-3b").smoke()
+    model = build(cfg)
+    params = model.init(jax.random.key(0))
+    return model, params
 
 
 def test_serve_batch_greedy():
@@ -18,10 +27,8 @@ def test_serve_batch_greedy():
     assert all(0 <= t < cfg.padded_vocab for o in outs for t in o)
 
 
-def test_engine_continuous_batching():
-    cfg = get_config("qwen2.5-3b").smoke()
-    model = build(cfg)
-    params = model.init(jax.random.key(0))
+def test_engine_continuous_batching(qwen_smoke):
+    model, params = qwen_smoke
     eng = ServeEngine(model, params, batch_size=2, max_seq=16)
     for i in range(5):
         eng.submit(Request(uid=i, prompt=np.arange(4, dtype=np.int32) + i,
@@ -29,3 +36,56 @@ def test_engine_continuous_batching():
     done = eng.run()
     assert len(done) == 5
     assert all(r.done and len(r.out_tokens) == 3 for r in done)
+
+
+def test_engine_mixed_budgets_stop_at_own_limit(qwen_smoke):
+    # the pre-fix wave barrier decoded max(max_new_tokens) lock-step for the
+    # whole wave; each sequence must now stop exactly at its own budget
+    model, params = qwen_smoke
+    budgets = [1, 5, 3, 2]
+    eng = ServeEngine(model, params, batch_size=2, max_seq=32)
+    for i, b in enumerate(budgets):
+        eng.submit(Request(uid=i, prompt=np.arange(4, dtype=np.int32) + i,
+                           max_new_tokens=b))
+    done = eng.run()
+    assert {r.uid: len(r.out_tokens) for r in done} == \
+        {i: b for i, b in enumerate(budgets)}
+    # never decodes past the aggregate budget (no duplicate padded work)
+    assert eng.decode_steps <= sum(budgets)
+    assert eng.prefill_rounds <= len(budgets)
+
+
+def test_engine_backfill_is_fifo(qwen_smoke):
+    model, params = qwen_smoke
+    eng = ServeEngine(model, params, batch_size=2, max_seq=16)
+    for i in range(4):
+        eng.submit(Request(uid=i, prompt=np.arange(3, dtype=np.int32) + i,
+                           max_new_tokens=2))
+    done = eng.run()
+    assert [r.uid for r in done] == [0, 1, 2, 3]
+
+
+def test_engine_underfull_batch_pads_with_dead_slots(qwen_smoke):
+    # fewer requests than slots: padding is shape-only, never surfaces as
+    # extra finished requests or extra rounds
+    model, params = qwen_smoke
+    eng = ServeEngine(model, params, batch_size=4, max_seq=16)
+    eng.submit(Request(uid=0, prompt=np.arange(5, dtype=np.int32),
+                       max_new_tokens=3))
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].out_tokens) == 3
+    assert eng.prefill_rounds == 1 and eng.decode_steps == 2
+
+
+def test_engine_single_round_matches_serve_batch(qwen_smoke):
+    # homogeneous budgets with batch_size == n requests is exactly one
+    # serve_batch call — tokens must agree bitwise
+    model, params = qwen_smoke
+    prompts = [np.arange(5, dtype=np.int32),
+               np.arange(3, 8, dtype=np.int32)]
+    want = serve_batch(model, params, prompts, max_new_tokens=4, max_seq=16)
+    eng = ServeEngine(model, params, batch_size=2, max_seq=16)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+    done = sorted(eng.run(), key=lambda r: r.uid)
+    assert [r.out_tokens for r in done] == want

@@ -26,7 +26,7 @@ def _t(fn, *args, reps=3):
 
 
 # machine-readable results collected while the driver runs; main() writes
-# them to --bench-json (BENCH_pr6.json by default)
+# them to --bench-json (BENCH_pr7.json by default)
 _BENCH: dict = {}
 
 
@@ -184,9 +184,10 @@ def rvv_rows(quick: bool = False):
     from repro.core import rvv, suite, tracegen
     rows = []
     cfg = eng.VectorEngineConfig(mvl=64, lanes=4)
+    corpus = [a for a in sorted(tracegen.APPS) if tracegen.APPS[a].asm]
     rvv._DECODE_CACHE.clear()
     t0 = time.perf_counter()
-    for app in tracegen.RIVEC_APPS:
+    for app in corpus:
         ta = time.perf_counter()
         d = rvv.decode_app(app, suite.effective_mvl(app, cfg), cfg)
         us = (time.perf_counter() - ta) * 1e6
@@ -208,12 +209,11 @@ def rvv_rows(quick: bool = False):
     t0 = time.perf_counter()
     asm_tab = suite.sweep_all(tracegen.ASM_APPS, mvls=(8, 64, 256),
                               lanes=(1, 8))
-    hand_tab = suite.sweep_all(tracegen.RIVEC_APPS, mvls=(8, 64, 256),
-                               lanes=(1, 8))
+    hand_tab = suite.sweep_all(corpus, mvls=(8, 64, 256), lanes=(1, 8))
     sweep_wall = time.perf_counter() - t0
     worst_sweep = max(
         abs(asm_tab[f"{a}:asm"][k] - hand_tab[a][k]) / hand_tab[a][k]
-        for a in tracegen.RIVEC_APPS for k in hand_tab[a])
+        for a in corpus for k in hand_tab[a])
     rows.append(("rvv_asm_sweep_parity", sweep_wall * 1e6,
                  f"max_rel_diff={worst_sweep:.2e}|cells="
                  f"{sum(len(v) for v in asm_tab.values())}"))
@@ -225,6 +225,44 @@ def rvv_rows(quick: bool = False):
         "n_reports": len(reports),
         "n_bitwise_identical": n_bitwise,
         "asm_sweep_max_rel_diff": worst_sweep,
+    }
+    return rows
+
+
+def codegen_rows(quick: bool = False):
+    """RVV codegen rows: per-app emit wall-clock (jaxpr kernel spec ->
+    generated assembly) and emit->decode round-trip verdicts vs the direct
+    lowering (bitwise fingerprints + exact chunk counts).
+
+    ``--quick`` round-trips at the grid extremes {8, 256}; the full run
+    uses every MVL the ci.sh ``codegen-roundtrip`` gate enforces."""
+    from repro.core import codegen, crossval, tracegen
+    rows = []
+    apps = [a for a in sorted(tracegen.APPS)
+            if tracegen.APPS[a].kernel is not None]
+    texts = {}
+    for app in apps:
+        t0 = time.perf_counter()
+        texts[app] = codegen.emit_app(app)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"codegen_emit_{app}", us,
+                     f"{len(texts[app].splitlines())}lines"))
+    mvls = (8, 256) if quick else None
+    t0 = time.perf_counter()
+    reports = []
+    for app in apps:
+        reports += crossval.round_trip_app(app, text=texts[app], mvls=mvls)
+    wall = time.perf_counter() - t0
+    for r in reports:
+        rows.append((f"codegen_roundtrip_{r.app}_mvl{r.mvl}", 0.0,
+                     f"{'bitwise' if r.fingerprint_eq else 'DIVERGED'}"
+                     f"|{'ok' if r.ok else 'FAIL'}"))
+    _BENCH["codegen"] = {
+        "roundtrip_wall_s": wall,
+        "all_ok": all(r.ok for r in reports),
+        "n_reports": len(reports),
+        "n_bitwise": sum(r.fingerprint_eq for r in reports),
+        "emitted_lines": {a: len(t.splitlines()) for a, t in texts.items()},
     }
     return rows
 
@@ -389,7 +427,7 @@ def main(argv=None) -> None:
         help="persistent simulation-service result cache (JSONL)")
     ap.add_argument("--dse-budget-kb", type=float, default=512.0)
     ap.add_argument("--bench-json", default=os.path.join(
-        os.path.dirname(__file__), "..", "BENCH_pr6.json"),
+        os.path.dirname(__file__), "..", "BENCH_pr7.json"),
         help="machine-readable results path (sweep wall-clock, batched "
              "speedup, per-app steady-state times, crossval verdicts "
              "incl. the RVV frontend, DSE frontiers + cache stats, "
@@ -407,13 +445,14 @@ def main(argv=None) -> None:
     elif args.quick:
         fns = (table_3_to_9_characterization, figures_4_to_10_scalability,
                sweep_llc, sweep_mshr, frontend_crossval,
-               lambda: rvv_rows(quick=True), steady_state_table,
+               lambda: rvv_rows(quick=True),
+               lambda: codegen_rows(quick=True), steady_state_table,
                lambda: sweep_wallclock(quick=True))
     else:
         fns = (table_3_to_9_characterization, figures_4_to_10_scalability,
                sweep_llc, sweep_mshr, frontend_crossval,
-               lambda: rvv_rows(), steady_state_table,
-               kernel_microbench, roofline_table,
+               lambda: rvv_rows(), lambda: codegen_rows(),
+               steady_state_table, kernel_microbench, roofline_table,
                lambda: sweep_wallclock(quick=False))
     print("name,us_per_call,derived")
     for fn in fns:

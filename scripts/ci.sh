@@ -15,7 +15,7 @@ python -m pytest -x -q -p no:randomly
 echo "== docs gate: doctests =="
 python -m pytest --doctest-modules -q -p no:randomly \
   src/repro/core/memory.py src/repro/core/suite.py src/repro/core/dse.py \
-  src/repro/serve/sim_service.py
+  src/repro/core/codegen.py src/repro/serve/sim_service.py
 
 echo "== docs gate: README snippets =="
 # extract EVERY ```python fenced block from the README and execute them in
@@ -36,6 +36,19 @@ echo "== rvv-crossval gate =="
 # static mixes exact, steady-state time within 5%, decoder-derived chunk
 # counts against the characterized closed forms, body invariants clean
 python -m repro.core.rvv --check-all
+
+echo "== codegen-roundtrip gate =="
+# the closed loop: every app with a jaxpr kernel= spec is emitted to RVV
+# assembly (repro.core.codegen) and decoded back (repro.core.rvv) at EVERY
+# mvl in {8..256} — the decoded chunk body must be bitwise
+# fingerprint-equal to the direct jaxpr lowering, with the characterized
+# chunk count and clean trace invariants
+python -m repro.core.codegen --check-all
+
+echo "== corpus-drift gate =="
+# the checked-in src/repro/asm/*.s corpus must byte-match what the
+# emitter produces from the kernel specs (no hand edits, no stale files)
+python scripts/gen_rvv_corpus.py --check
 
 echo "== dse-smoke gate =="
 # 64-point space, single device: explore twice through a fresh on-disk

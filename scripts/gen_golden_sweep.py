@@ -1,4 +1,4 @@
-"""Golden sweep table (the 24-config x 10-app speedup grid): generate/check.
+"""Golden sweep table (24 configs x 10 apps + 10 :asm variants): gen/check.
 
 Two modes:
 
@@ -25,8 +25,10 @@ RTOL = 1e-2  # generous vs float32 platform jitter, tight vs real drift
 
 
 def _payload() -> dict:
-    """All 10 registered apps plus the 7 RVV-assembly-sourced variants
-    (trace source: src/repro/asm via repro.core.rvv) — 408 cells.  The
+    """All 10 registered apps plus the 10 RVV-assembly-sourced variants
+    (trace source: the generated src/repro/asm corpus via repro.core.rvv)
+    — 480 cells, up from 408 when the corpus was the hand-written RiVec
+    seven (PR 7 generates all ten from the jaxpr kernel specs).  The
     ``:asm`` cells pin the *decoder* end to end: a decode regression that
     survives the crossval mixes still shows up as a speedup drift here."""
     from repro.core import tracegen

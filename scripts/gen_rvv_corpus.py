@@ -1,331 +1,81 @@
 """Generate the RVV assembly corpus (``src/repro/asm/*.s``).
 
-Each RiVec app's characterized loop body (``tracegen.body_for``) has an RVV
-v1.0 assembly spelling: the strip-mine / counted chunk loop, the
-``.stream`` footprint declarations, the characterized per-chunk scalar work
-as ``.rept`` filler, and the arithmetic chain in the canonical
-``isa.fu_sequence`` order (the same order the hand-coded bodies and the
-jaxpr frontend's ``chain_ops`` use).  The generated files are checked in;
-regenerate after recalibrating ``tracegen``:
+Every app carrying a jaxpr ``kernel=`` spec — the seven RiVec apps and the
+three ML workloads — ships a generated RVV v1.0 spelling of its loop body.
+Since PR 7 the instruction bodies are not hand-maintained: each file is
+``repro.core.codegen.emit_app(app)``, the code generator that lowers the
+jaxpr kernel spec and spells the resulting vector-IR records back as
+assembly (per-VL dispatch, ``.chunk``/``.stream`` directives, exact
+fractional trip counts).  The generated files are checked in; regenerate
+after changing a kernel spec, the frontend lowering, or the emitter:
 
     PYTHONPATH=src python scripts/gen_rvv_corpus.py
 
-``python -m repro.core.rvv --check-all`` (the ci.sh ``rvv-crossval`` gate)
-decodes the corpus back through ``repro.core.rvv`` and cross-validates it
-against the hand-coded bodies at every MVL of the paper grid.
+The committed corpus must byte-match the regenerator (the ci.sh
+``corpus-drift`` gate)::
+
+    PYTHONPATH=src python scripts/gen_rvv_corpus.py --check
+
+and the decoded corpus is held to the other frontends by two CI gates:
+``python -m repro.core.rvv --check-all`` (decoded vs hand-coded bodies at
+every MVL of the paper grid) and ``python -m repro.core.codegen
+--check-all`` (decoded vs jaxpr lowering, bitwise).
 """
 from __future__ import annotations
 
+import argparse
 import os
+import sys
 
-from repro.core import isa
-from repro.core import tracegen as tg
+from repro.core import codegen, tracegen
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "src", "repro", "asm")
 
-S, M, D, T = isa.FU_SIMPLE, isa.FU_MUL, isa.FU_DIV, isa.FU_TRANS
-# FU_TRANS is a binary transcendental pseudo-call (vendor vector-libm
-# lowering) so the chain keeps the hand-coded bodies' two-source records
-FLOAT_OPS = {S: "vfadd.vv", M: "vfmul.vv", D: "vfdiv.vv", T: "vfpow.vv"}
-INT_OPS = {S: "vadd.vv", M: "vmul.vv", D: "vdiv.vv", T: "vfpow.vv"}
+
+def corpus_apps() -> list[str]:
+    """Every registered app with both a kernel= spec and an asm= entry."""
+    return [a for a in sorted(tracegen.APPS)
+            if tracegen.APPS[a].kernel is not None and tracegen.APPS[a].asm]
 
 
-def chain(n, mix, start=4, ops=FLOAT_OPS):
-    """The canonical characterized arithmetic chain: same FU order and
-    rotating register window as ``isa.TraceBuilder.arith_chain``."""
-    out = []
-    for i, cls in enumerate(isa.fu_sequence(n, mix)):
-        d, s1, s2 = start + i % 16, start + (i + 5) % 16, start + (i + 11) % 16
-        out.append(f"    {ops[cls]} v{d}, v{s1}, v{s2}")
-    return out
+def generate() -> dict[str, str]:
+    """``{filename: text}`` for the whole corpus."""
+    return {tracegen.APPS[a].asm: codegen.emit_app(a) for a in corpus_apps()}
 
 
-def filler(n):
-    """Characterized per-chunk scalar work: ``n`` bookkeeping instructions
-    the abstract machine cannot fold (s1 is never given a known value)."""
-    n = int(round(n))
-    if n <= 0:
-        return []
-    if n == 1:
-        return ["    addi s1, s1, 1"]
-    return [f"    .rept {n}", "    addi s1, s1, 1", "    .endr"]
-
-
-def window_init(lo, hi):
-    """Prologue definitions of the rotating arithmetic register window."""
-    return [f"    vmv.v.i v{r}, 0" for r in range(lo, hi + 1)]
-
-
-def header(app, notes):
-    return [
-        f"# RVV v1.0 kernel: RiVec '{app}' — {notes}",
-        "# GENERATED by scripts/gen_rvv_corpus.py from the characterized",
-        "# tracegen constants; regenerate after recalibration.  Decoded by",
-        "# repro.core.rvv and cross-validated against tracegen.body_for at",
-        "# every MVL (python -m repro.core.rvv --check-all).",
-        "    .text",
-    ]
-
-
-def blackscholes():
-    L = header("blackscholes", "regular DLP PDE pricing (Table 3 / Fig 4)")
-    fp = tg._BS_FOOTPRINT_KB
-    L += [f"    .stream opt {fp!r}",
-          f"    .stream price {fp!r}",
-          "    .globl blackscholes",
-          "blackscholes:",
-          "    la a1, opt",
-          "    la a2, price",
-          f"    li a0, {tg._BS_UNITS}          # option evaluations (AVL)",
-          "    vsetvli t0, a0, e64, m1, ta, ma"]
-    L += window_init(4, 19)
-    L += [".chunk",
-          "loop:",
-          "    vsetvli t0, a0, e64, m1, ta, ma",
-          "    slli t2, t0, 3"]
-    L += filler(tg._BS_S1)
-    for i in range(tg._BS_MEM_PER - 5):
-        L += [f"    vle64.v v{i % 4}, (a1)", "    add a1, a1, t2"]
-    L += chain(tg._BS_ARITH_PER, tg._BS_MIX)
-    for i in range(5):
-        L += [f"    vse64.v v{4 + i}, (a2)", "    add a2, a2, t2"]
-    L += ["    sub a0, a0, t0", "    bgtz a0, loop", "    ret", ""]
-    return L
-
-
-def jacobi2d():
-    L = header("jacobi-2d", "stencil, slide-heavy (Table 5 / Fig 6)")
-    fp = tg._J2_GRID_KB
-    L += [f"    .stream grid {fp!r}",
-          f"    .stream grid_out {fp!r}",
-          "    .globl jacobi2d",
-          "jacobi2d:",
-          "    la a1, grid",
-          "    la a2, grid_out",
-          f"    li a0, {tg._J2_CHUNK8 * 8}         # grid points (AVL)",
-          "    vsetvli t0, a0, e64, m1, ta, ma"]
-    L += window_init(6, 21)
-    L += [".chunk",
-          "loop:",
-          "    vsetvli t0, a0, e64, m1, ta, ma",
-          "    slli t2, t0, 3"]
-    L += filler(tg._J2_S1)
-    for i in range(4):
-        L += [f"    vle64.v v{i}, (a1)", "    add a1, a1, t2"]
-    L += ["    vslide1up.vx v4, v0, zero",
-          "    vslide1down.vx v5, v0, zero"]
-    L += chain(20, tg._J2_MIX, start=6)
-    L += ["    vslide1up.vx v20, v6, zero",
-          "    vslide1down.vx v21, v7, zero",
-          "    vslide1up.vx v22, v8, zero",
-          "    vse64.v v20, (a2)",
-          "    add a2, a2, t2",
-          "    sub a0, a0, t0", "    bgtz a0, loop", "    ret", ""]
-    return L
-
-
-def particlefilter():
-    L = header("particlefilter",
-               "vfirst/vcpop mask round trips stall the scalar core "
-               "(Table 6 / Fig 7)")
-    avl = round(12_359_078_569 / 960)   # guess-update iterations (chunks*VL)
-    L += [f"    .stream particles {tg._PF_STATE_KB!r}",
-          "    .globl particlefilter",
-          "particlefilter:",
-          "    la a1, particles",
-          f"    li a0, {avl}",
-          "    vsetvli t0, a0, e64, m1, ta, ma"]
-    L += window_init(4, 19)
-    L += [".chunk",
-          "loop:",
-          "    vsetvli t0, a0, e64, m1, ta, ma",
-          "    slli t2, t0, 3",
-          "    vle64.v v0, (a1)",
-          "    add a1, a1, t2"]
-    # Box-Muller + motion model: log/cos/sqrt heavy
-    L += chain(760, tg._PF_MIX)
-    L += ["    li t3, 16"]
-    L += ["search:"]
-    # sequential-search: compare, vcpop/vfirst, dependent scalar decision
-    L += chain(11, {"simple": 1.0})
-    L += ["    vcpop.m t4, v5",
-          "    vfirst.m t5, v6",
-          "    add s2, s2, t4          # scalar core consumes the mask result"]
-    L += filler(83)
-    L += ["    addi t3, t3, -1",
-          "    bnez t3, search",
-          "    sub a0, a0, t0", "    bgtz a0, loop", "    ret", ""]
-    return L
-
-
-def pathfinder():
-    L = header("pathfinder",
-               "26% element-manipulation instructions (Table 7 / Fig 8)")
-    L += [f"    .stream wall {tg._PATH_WALL_KB!r}",
-          f"    .stream row {tg._PATH_ROW_KB!r}",
-          "    .globl pathfinder",
-          "pathfinder:",
-          "    la a1, wall",
-          "    la a2, row",
-          f"    li a0, {tg._PATH_CHUNK8 * 8}         # row cells (AVL)"]
-    L += [".chunk",
-          "loop:",
-          "    vsetvli t0, a0, e64, m1, ta, ma",
-          "    slli t2, t0, 3"]
-    L += filler(tg._PATH_S1)
-    L += ["    vle64.v v0, (a1)",
-          "    add a1, a1, t2",
-          "    vle64.v v1, (a2)",
-          "    vle64.v v2, (a2)",
-          "    vslide1up.vx v3, v1, zero",
-          "    vslide1down.vx v4, v1, zero",
-          "    vmin.vv v5, v3, v1",
-          "    vmin.vv v6, v5, v4",
-          "    vadd.vv v7, v6, v0",
-          "    vadd.vv v8, v7, v2",
-          "    vslide1up.vx v9, v8, zero",
-          "    vslide1down.vx v10, v8, zero",
-          "    vmin.vv v11, v9, v10",
-          "    vmin.vv v12, v11, v8",
-          "    vle64.v v13, (a2)",
-          "    vse64.v v12, (a2)",
-          "    add a2, a2, t2",
-          "    sub a0, a0, t0", "    bgtz a0, loop", "    ret", ""]
-    return L
-
-
-def streamcluster():
-    L = header("streamcluster",
-               "memory-bound dist() with a reduction per call "
-               "(Table 8 / Fig 9)")
-    L += [f"    .stream points {tg._SC_WSET_KB!r}",
-          f"    .stream center {tg._SC_WSET_KB!r}",
-          "    .globl streamcluster",
-          "streamcluster:",
-          "    la a1, points",
-          "    la a5, center",
-          f"    li a3, {tg._SC_CALLS}          # dist() calls",
-          f"    li a2, {tg._SC_DIMS}",
-          "    vsetvli t0, a2, e64, m1, ta, ma",
-          "    vle64.v v8, (a5)            # candidate-center block",
-          "    vmv.s.x v20, zero           # distance accumulator seed"]
-    L += [".chunk",
-          "call:",
-          f"    li a2, {tg._SC_DIMS}               # dims: the requested VL",
-          "    vsetvli t0, a2, e64, m1, ta, ma",
-          "    slli t2, t0, 3"]
-    L += ["dist:"]
-    L += filler(2.5)
-    L += ["    vle64.v v0, (a1)",
-          "    add a1, a1, t2",
-          "    vfmul.vv v9, v0, v8",
-          "    sub a2, a2, t0",
-          "    bgtz a2, dist",
-          "    vfredusum.vs v20, v9, v20",
-          "    vcpop.m t4, v20",
-          "    add s2, s2, t4          # center-opening cost decision"]
-    L += filler(29)
-    L += ["    addi a3, a3, -1",
-          "    bnez a3, call", "    ret", ""]
-    return L
-
-
-def canneal():
-    L = header("canneal",
-               "irregular DLP: indexed netlist walk, full-MVL spills, "
-               "swap decision round trip (Table 4 / Fig 5)")
-    n_mv = int(round(tg._CA_MOVES / tg._CA_N / 2))
-    L += [f"    .stream net_a {tg._CA_HOT_KB!r}",
-          f"    .stream net_b {tg._CA_HOT_KB!r}",
-          "    .globl canneal",
-          "canneal:",
-          "    la a5, net_a",
-          "    la a6, net_b",
-          "    li a2, 12",
-          "    vsetvli t0, a2, e64, m1, ta, ma"]
-    L += window_init(0, 3)      # swap-argument registers (vmv1r sources)
-    L += window_init(4, 19)
-    L += ["    vid.v v24                   # netlist index vector",
-          "    vmv.s.x v20, zero           # routing-cost accumulator",
-          f"    li a4, {tg._CA_N}            # swaps (moves x temp steps)"]
-    L += [".chunk",
-          "swap:",
-          "    li t3, 2                    # two picked nodes"]
-    L += ["node:"]
-    # whole-register argument moves: VL-independent (the §4.1.2 spills)
-    for i in range(n_mv):
-        L.append(f"    vmv1r.v v{8 + i % 4}, v{i % 4}")
-    L += ["    li a2, 12                   # fan size (requested VL)",
-          "    vsetvli t0, a2, e64, m1, ta, ma"]
-    L += filler(12)
-    L += ["    j fan_first"]
-    L += ["fan:"]
-    L += filler(99.4)
-    L += ["fan_first:",
-          "    vluxei64.v v0, (a5), v24",
-          "    vluxei64.v v1, (a6), v24"]
-    L += chain(22, tg._CA_MIX, ops=INT_OPS)
-    L += ["    sub a2, a2, t0",
-          "    bgtz a2, fan",
-          "    vfredusum.vs v20, v6, v20",
-          "    vcpop.m t4, v20",
-          "    add s2, s2, t4          # routing cost + swap decision"]
-    L += filler(819)
-    L += ["    addi t3, t3, -1",
-          "    bnez t3, node",
-          "    addi a4, a4, -1",
-          "    bnez a4, swap", "    ret", ""]
-    return L
-
-
-def swaptions():
-    L = header("swaptions",
-               "HJM Monte-Carlo with a VL-scaled working set — the Fig-10 "
-               "LLC lever (Table 9 / Fig 10)")
-    avl = round(tg._SW_ELEMS / 29)
-    L += ["    .stream hjm vl*8*350/1024",
-          "    .stream path vl*8*350/1024",
-          "    .globl swaptions",
-          "swaptions:",
-          "    la a1, hjm",
-          "    la a2, path",
-          f"    li a0, {avl}          # HJM path-state elements (AVL)",
-          "    vsetvli t0, a0, e64, m1, ta, ma"]
-    L += window_init(4, 19)
-    L += [".chunk",
-          "loop:",
-          "    vsetvli t0, a0, e64, m1, ta, ma",
-          "    slli t2, t0, 3"]
-    L += filler(52.35)
-    for i in range(4):
-        L += [f"    vle64.v v{i}, (a1)", "    add a1, a1, t2"]
-    L += chain(24, tg._SW_MIX)
-    L += ["    vse64.v v10, (a2)",
-          "    add a2, a2, t2",
-          "    sub a0, a0, t0", "    bgtz a0, loop", "    ret", ""]
-    return L
-
-
-CORPUS = {
-    "blackscholes.s": blackscholes,
-    "jacobi2d.s": jacobi2d,
-    "particlefilter.s": particlefilter,
-    "pathfinder.s": pathfinder,
-    "streamcluster.s": streamcluster,
-    "canneal.s": canneal,
-    "swaptions.s": swaptions,
-}
-
-
-def main() -> int:
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="(Re)generate src/repro/asm/*.s from the jaxpr kernel "
+                    "specs via repro.core.codegen.")
+    ap.add_argument("--check", action="store_true",
+                    help="verify the committed corpus byte-matches the "
+                         "regenerator output instead of writing (the ci.sh "
+                         "corpus-drift gate)")
+    args = ap.parse_args(argv)
     os.makedirs(OUT_DIR, exist_ok=True)
-    for name, gen in CORPUS.items():
-        path = os.path.join(OUT_DIR, name)
-        with open(path, "w") as f:
-            f.write("\n".join(gen()))
-        print(f"wrote {os.path.normpath(path)}")
+    drift = []
+    for fname, text in generate().items():
+        path = os.path.join(OUT_DIR, fname)
+        if args.check:
+            on_disk = None
+            if os.path.exists(path):
+                with open(path) as f:
+                    on_disk = f.read()
+            if on_disk != text:
+                drift.append(fname)
+                print(f"DRIFT: {fname} does not match emit_app output")
+            else:
+                print(f"ok: {fname}")
+        else:
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text.splitlines())} lines)")
+    if args.check:
+        verdict = "IN SYNC" if not drift else f"{len(drift)} file(s) DRIFTED"
+        print(f"corpus vs emitter: {verdict}")
+        return 0 if not drift else 1
     return 0
 
 
 if __name__ == "__main__":
-    raise SystemExit(main())
+    sys.exit(main())

@@ -1,44 +1,51 @@
-# RVV v1.0 kernel: RiVec 'canneal' — irregular DLP: indexed netlist walk, full-MVL spills, swap decision round trip (Table 4 / Fig 5)
-# GENERATED by scripts/gen_rvv_corpus.py from the characterized
-# tracegen constants; regenerate after recalibration.  Decoded by
-# repro.core.rvv and cross-validated against tracegen.body_for at
-# every MVL (python -m repro.core.rvv --check-all).
+# canneal: RVV v1.0 kernel emitted by repro.core.codegen -- do not edit.
+# Decodes (repro.core.rvv) to the jaxpr-lowered trace, bitwise, at
+# every effective MVL in {8/16/22}; the .chunk loop's bgtz
+# counter encodes the exact fractional trip count.
     .text
-    .stream net_a 3072.0
-    .stream net_b 3072.0
     .globl canneal
+    .stream fp0 3072.0
 canneal:
-    la a5, net_a
-    la a6, net_b
-    li a2, 12
-    vsetvli t0, a2, e64, m1, ta, ma
+    vsetvli t0, zero, e64, m1
     vmv.v.i v0, 0
     vmv.v.i v1, 0
     vmv.v.i v2, 0
     vmv.v.i v3, 0
-    vmv.v.i v4, 0
-    vmv.v.i v5, 0
-    vmv.v.i v6, 0
-    vmv.v.i v7, 0
-    vmv.v.i v8, 0
-    vmv.v.i v9, 0
-    vmv.v.i v10, 0
-    vmv.v.i v11, 0
-    vmv.v.i v12, 0
-    vmv.v.i v13, 0
-    vmv.v.i v14, 0
-    vmv.v.i v15, 0
-    vmv.v.i v16, 0
-    vmv.v.i v17, 0
-    vmv.v.i v18, 0
-    vmv.v.i v19, 0
-    vid.v v24                   # netlist index vector
-    vmv.s.x v20, zero           # routing-cost accumulator
-    li a4, 1920000            # swaps (moves x temp steps)
-.chunk
-swap:
-    li t3, 2                    # two picked nodes
-node:
+    vmv.v.i v20, 0
+    vid.v v31
+    vcpop.m s3, v0
+    li t1, 8
+    beq t0, t1, cfg_8
+    li t1, 16
+    beq t0, t1, cfg_16
+    li t1, 22
+    beq t0, t1, cfg_22
+    j vl_bad
+cfg_8:
+    li a3, 1920000
+    li a4, 1
+    j cfg_done
+cfg_16:
+    li a3, 1920000
+    li a4, 1
+    j cfg_done
+cfg_22:
+    li a3, 1920000
+    li a4, 1
+    j cfg_done
+vl_bad:
+    call abort
+cfg_done:
+    .chunk
+loop:
+    li t1, 8
+    beq t0, t1, body_8
+    li t1, 16
+    beq t0, t1, body_16
+    li t1, 22
+    beq t0, t1, body_22
+    j vl_bad
+body_8:
     vmv1r.v v8, v0
     vmv1r.v v9, v1
     vmv1r.v v10, v2
@@ -55,51 +62,358 @@ node:
     vmv1r.v v9, v1
     vmv1r.v v10, v2
     vmv1r.v v11, v3
-    li a2, 12                   # fan size (requested VL)
-    vsetvli t0, a2, e64, m1, ta, ma
     .rept 12
-    addi s1, s1, 1
+    add s5, s5, s6
     .endr
-    j fan_first
-fan:
+    la a5, fp0
+    vluxei64.v v0, (a5), v31
+    la a5, fp0
+    vluxei64.v v0, (a5), v31
+    vid.v v0
+    vid.v v1
+    vid.v v2
+    vid.v v3
+    vid.v v4
+    vfadd.vf v5, v0, ft0
+    vfadd.vf v6, v1, ft0
+    vfadd.vf v7, v2, ft0
+    vfadd.vf v8, v3, ft0
+    vfadd.vf v9, v4, ft0
+    vfadd.vf v10, v5, ft0
+    vfadd.vv v0, v0, v6
+    vfadd.vv v1, v1, v7
+    vfadd.vv v2, v2, v8
+    vfadd.vv v3, v3, v9
+    vfadd.vv v4, v4, v10
+    vfadd.vv v0, v5, v0
+    vfadd.vv v1, v6, v1
+    vfadd.vv v1, v7, v2
+    vfadd.vv v1, v8, v3
+    vfadd.vv v1, v9, v4
+    vfadd.vv v0, v10, v0
     .rept 99
-    addi s1, s1, 1
+    add s5, s5, s6
     .endr
-fan_first:
-    vluxei64.v v0, (a5), v24
-    vluxei64.v v1, (a6), v24
-    vadd.vv v4, v9, v15
-    vadd.vv v5, v10, v16
-    vadd.vv v6, v11, v17
-    vadd.vv v7, v12, v18
-    vadd.vv v8, v13, v19
-    vadd.vv v9, v14, v4
-    vadd.vv v10, v15, v5
-    vadd.vv v11, v16, v6
-    vadd.vv v12, v17, v7
-    vadd.vv v13, v18, v8
-    vadd.vv v14, v19, v9
-    vadd.vv v15, v4, v10
-    vadd.vv v16, v5, v11
-    vadd.vv v17, v6, v12
-    vadd.vv v18, v7, v13
-    vadd.vv v19, v8, v14
-    vadd.vv v4, v9, v15
-    vadd.vv v5, v10, v16
-    vadd.vv v6, v11, v17
-    vadd.vv v7, v12, v18
-    vadd.vv v8, v13, v19
-    vadd.vv v9, v14, v4
-    sub a2, a2, t0
-    bgtz a2, fan
-    vfredusum.vs v20, v6, v20
-    vcpop.m t4, v20
-    add s2, s2, t4          # routing cost + swap decision
-    .rept 819
-    addi s1, s1, 1
+    la a5, fp0
+    vluxei64.v v0, (a5), v31
+    la a5, fp0
+    vluxei64.v v0, (a5), v31
+    vid.v v0
+    vid.v v1
+    vid.v v2
+    vid.v v3
+    vid.v v4
+    vfadd.vf v5, v0, ft0
+    vfadd.vf v6, v1, ft0
+    vfadd.vf v7, v2, ft0
+    vfadd.vf v8, v3, ft0
+    vfadd.vf v9, v4, ft0
+    vfadd.vf v10, v5, ft0
+    vfadd.vv v0, v0, v6
+    vfadd.vv v1, v1, v7
+    vfadd.vv v2, v2, v8
+    vfadd.vv v3, v3, v9
+    vfadd.vv v4, v4, v10
+    vfadd.vv v0, v5, v0
+    vfadd.vv v1, v6, v1
+    vfadd.vv v1, v7, v2
+    vfadd.vv v1, v8, v3
+    vfadd.vv v1, v9, v4
+    vfadd.vv v1, v10, v0
+    vfredusum.vs v0, v0, v0
+    vcpop.m t6, v20
+    .rept 820
+    add s4, s5, s3
     .endr
-    addi t3, t3, -1
-    bnez t3, node
-    addi a4, a4, -1
-    bnez a4, swap
+    vmv1r.v v8, v0
+    vmv1r.v v9, v1
+    vmv1r.v v10, v2
+    vmv1r.v v11, v3
+    vmv1r.v v8, v0
+    vmv1r.v v9, v1
+    vmv1r.v v10, v2
+    vmv1r.v v11, v3
+    vmv1r.v v8, v0
+    vmv1r.v v9, v1
+    vmv1r.v v10, v2
+    vmv1r.v v11, v3
+    vmv1r.v v8, v0
+    vmv1r.v v9, v1
+    vmv1r.v v10, v2
+    vmv1r.v v11, v3
+    .rept 12
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vluxei64.v v0, (a5), v31
+    la a5, fp0
+    vluxei64.v v0, (a5), v31
+    vid.v v0
+    vid.v v1
+    vid.v v2
+    vid.v v3
+    vid.v v4
+    vfadd.vf v5, v0, ft0
+    vfadd.vf v6, v1, ft0
+    vfadd.vf v7, v2, ft0
+    vfadd.vf v8, v3, ft0
+    vfadd.vf v9, v4, ft0
+    vfadd.vf v10, v5, ft0
+    vfadd.vv v0, v0, v6
+    vfadd.vv v1, v1, v7
+    vfadd.vv v2, v2, v8
+    vfadd.vv v3, v3, v9
+    vfadd.vv v4, v4, v10
+    vfadd.vv v0, v5, v0
+    vfadd.vv v1, v6, v1
+    vfadd.vv v1, v7, v2
+    vfadd.vv v1, v8, v3
+    vfadd.vv v1, v9, v4
+    vfadd.vv v0, v10, v0
+    .rept 99
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vluxei64.v v0, (a5), v31
+    la a5, fp0
+    vluxei64.v v0, (a5), v31
+    vid.v v0
+    vid.v v1
+    vid.v v2
+    vid.v v3
+    vid.v v4
+    vfadd.vf v5, v0, ft0
+    vfadd.vf v6, v1, ft0
+    vfadd.vf v7, v2, ft0
+    vfadd.vf v8, v3, ft0
+    vfadd.vf v9, v4, ft0
+    vfadd.vf v10, v5, ft0
+    vfadd.vv v0, v0, v6
+    vfadd.vv v1, v1, v7
+    vfadd.vv v2, v2, v8
+    vfadd.vv v3, v3, v9
+    vfadd.vv v4, v4, v10
+    vfadd.vv v0, v5, v0
+    vfadd.vv v1, v6, v1
+    vfadd.vv v1, v7, v2
+    vfadd.vv v1, v8, v3
+    vfadd.vv v1, v9, v4
+    vfadd.vv v1, v10, v0
+    vfredusum.vs v0, v0, v0
+    vcpop.m t6, v20
+    .rept 820
+    add s4, s5, s3
+    .endr
+    j close
+body_16:
+    vmv1r.v v8, v0
+    vmv1r.v v9, v1
+    vmv1r.v v10, v2
+    vmv1r.v v11, v3
+    vmv1r.v v8, v0
+    vmv1r.v v9, v1
+    vmv1r.v v10, v2
+    vmv1r.v v11, v3
+    vmv1r.v v8, v0
+    vmv1r.v v9, v1
+    vmv1r.v v10, v2
+    vmv1r.v v11, v3
+    vmv1r.v v8, v0
+    vmv1r.v v9, v1
+    vmv1r.v v10, v2
+    vmv1r.v v11, v3
+    .rept 12
+    add s5, s5, s6
+    .endr
+    li t2, 12
+    vsetvli zero, t2, e64, m1
+    la a5, fp0
+    vluxei64.v v0, (a5), v31
+    la a5, fp0
+    vluxei64.v v0, (a5), v31
+    vid.v v0
+    vid.v v1
+    vid.v v2
+    vid.v v3
+    vid.v v4
+    vfadd.vf v5, v0, ft0
+    vfadd.vf v6, v1, ft0
+    vfadd.vf v7, v2, ft0
+    vfadd.vf v8, v3, ft0
+    vfadd.vf v9, v4, ft0
+    vfadd.vf v10, v5, ft0
+    vfadd.vv v0, v0, v6
+    vfadd.vv v1, v1, v7
+    vfadd.vv v2, v2, v8
+    vfadd.vv v3, v3, v9
+    vfadd.vv v4, v4, v10
+    vfadd.vv v0, v5, v0
+    vfadd.vv v1, v6, v1
+    vfadd.vv v1, v7, v2
+    vfadd.vv v1, v8, v3
+    vfadd.vv v1, v9, v4
+    vfadd.vv v1, v10, v0
+    vfredusum.vs v0, v0, v0
+    vcpop.m t6, v20
+    .rept 820
+    add s4, s5, s3
+    .endr
+    vmv1r.v v8, v0
+    vmv1r.v v9, v1
+    vmv1r.v v10, v2
+    vmv1r.v v11, v3
+    vmv1r.v v8, v0
+    vmv1r.v v9, v1
+    vmv1r.v v10, v2
+    vmv1r.v v11, v3
+    vmv1r.v v8, v0
+    vmv1r.v v9, v1
+    vmv1r.v v10, v2
+    vmv1r.v v11, v3
+    vmv1r.v v8, v0
+    vmv1r.v v9, v1
+    vmv1r.v v10, v2
+    vmv1r.v v11, v3
+    .rept 12
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vluxei64.v v0, (a5), v31
+    la a5, fp0
+    vluxei64.v v0, (a5), v31
+    vid.v v0
+    vid.v v1
+    vid.v v2
+    vid.v v3
+    vid.v v4
+    vfadd.vf v5, v0, ft0
+    vfadd.vf v6, v1, ft0
+    vfadd.vf v7, v2, ft0
+    vfadd.vf v8, v3, ft0
+    vfadd.vf v9, v4, ft0
+    vfadd.vf v10, v5, ft0
+    vfadd.vv v0, v0, v6
+    vfadd.vv v1, v1, v7
+    vfadd.vv v2, v2, v8
+    vfadd.vv v3, v3, v9
+    vfadd.vv v4, v4, v10
+    vfadd.vv v0, v5, v0
+    vfadd.vv v1, v6, v1
+    vfadd.vv v1, v7, v2
+    vfadd.vv v1, v8, v3
+    vfadd.vv v1, v9, v4
+    vfadd.vv v1, v10, v0
+    vfredusum.vs v0, v0, v0
+    vcpop.m t6, v20
+    .rept 820
+    add s4, s5, s3
+    .endr
+    j close
+body_22:
+    vmv1r.v v8, v0
+    vmv1r.v v9, v1
+    vmv1r.v v10, v2
+    vmv1r.v v11, v3
+    vmv1r.v v8, v0
+    vmv1r.v v9, v1
+    vmv1r.v v10, v2
+    vmv1r.v v11, v3
+    vmv1r.v v8, v0
+    vmv1r.v v9, v1
+    vmv1r.v v10, v2
+    vmv1r.v v11, v3
+    vmv1r.v v8, v0
+    vmv1r.v v9, v1
+    vmv1r.v v10, v2
+    vmv1r.v v11, v3
+    .rept 12
+    add s5, s5, s6
+    .endr
+    li t2, 12
+    vsetvli zero, t2, e64, m1
+    la a5, fp0
+    vluxei64.v v0, (a5), v31
+    la a5, fp0
+    vluxei64.v v0, (a5), v31
+    vid.v v0
+    vid.v v1
+    vid.v v2
+    vid.v v3
+    vid.v v4
+    vfadd.vf v5, v0, ft0
+    vfadd.vf v6, v1, ft0
+    vfadd.vf v7, v2, ft0
+    vfadd.vf v8, v3, ft0
+    vfadd.vf v9, v4, ft0
+    vfadd.vf v10, v5, ft0
+    vfadd.vv v0, v0, v6
+    vfadd.vv v1, v1, v7
+    vfadd.vv v2, v2, v8
+    vfadd.vv v3, v3, v9
+    vfadd.vv v4, v4, v10
+    vfadd.vv v0, v5, v0
+    vfadd.vv v1, v6, v1
+    vfadd.vv v1, v7, v2
+    vfadd.vv v1, v8, v3
+    vfadd.vv v1, v9, v4
+    vfadd.vv v1, v10, v0
+    vfredusum.vs v0, v0, v0
+    vcpop.m t6, v20
+    .rept 820
+    add s4, s5, s3
+    .endr
+    vmv1r.v v8, v0
+    vmv1r.v v9, v1
+    vmv1r.v v10, v2
+    vmv1r.v v11, v3
+    vmv1r.v v8, v0
+    vmv1r.v v9, v1
+    vmv1r.v v10, v2
+    vmv1r.v v11, v3
+    vmv1r.v v8, v0
+    vmv1r.v v9, v1
+    vmv1r.v v10, v2
+    vmv1r.v v11, v3
+    vmv1r.v v8, v0
+    vmv1r.v v9, v1
+    vmv1r.v v10, v2
+    vmv1r.v v11, v3
+    .rept 12
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vluxei64.v v0, (a5), v31
+    la a5, fp0
+    vluxei64.v v0, (a5), v31
+    vid.v v0
+    vid.v v1
+    vid.v v2
+    vid.v v3
+    vid.v v4
+    vfadd.vf v5, v0, ft0
+    vfadd.vf v6, v1, ft0
+    vfadd.vf v7, v2, ft0
+    vfadd.vf v8, v3, ft0
+    vfadd.vf v9, v4, ft0
+    vfadd.vf v10, v5, ft0
+    vfadd.vv v0, v0, v6
+    vfadd.vv v1, v1, v7
+    vfadd.vv v2, v2, v8
+    vfadd.vv v3, v3, v9
+    vfadd.vv v4, v4, v10
+    vfadd.vv v0, v5, v0
+    vfadd.vv v1, v6, v1
+    vfadd.vv v1, v7, v2
+    vfadd.vv v1, v8, v3
+    vfadd.vv v1, v9, v4
+    vfadd.vv v1, v10, v0
+    vfredusum.vs v0, v0, v0
+    vcpop.m t6, v20
+    .rept 820
+    add s4, s5, s3
+    .endr
+    j close
+close:
+    sub a3, a3, a4
+    bgtz a3, loop
     ret

@@ -1,40 +1,284 @@
-# RVV v1.0 kernel: RiVec 'streamcluster' — memory-bound dist() with a reduction per call (Table 8 / Fig 9)
-# GENERATED by scripts/gen_rvv_corpus.py from the characterized
-# tracegen constants; regenerate after recalibration.  Decoded by
-# repro.core.rvv and cross-validated against tracegen.body_for at
-# every MVL (python -m repro.core.rvv --check-all).
+# streamcluster: RVV v1.0 kernel emitted by repro.core.codegen -- do not edit.
+# Decodes (repro.core.rvv) to the jaxpr-lowered trace, bitwise, at
+# every effective MVL in {8/16/32/64/128}; the .chunk loop's bgtz
+# counter encodes the exact fractional trip count.
     .text
-    .stream points 768.0
-    .stream center 768.0
     .globl streamcluster
+    .stream fp0 768.0
 streamcluster:
-    la a1, points
-    la a5, center
-    li a3, 59533158          # dist() calls
-    li a2, 128
-    vsetvli t0, a2, e64, m1, ta, ma
-    vle64.v v8, (a5)            # candidate-center block
-    vmv.s.x v20, zero           # distance accumulator seed
-.chunk
-call:
-    li a2, 128               # dims: the requested VL
-    vsetvli t0, a2, e64, m1, ta, ma
-    slli t2, t0, 3
-dist:
+    vsetvli t0, zero, e64, m1
+    vmv.v.i v20, 0
+    vmv.v.i v0, 0
+    vcpop.m s3, v0
+    li t1, 8
+    beq t0, t1, cfg_8
+    li t1, 16
+    beq t0, t1, cfg_16
+    li t1, 32
+    beq t0, t1, cfg_32
+    li t1, 64
+    beq t0, t1, cfg_64
+    li t1, 128
+    beq t0, t1, cfg_128
+    j vl_bad
+cfg_8:
+    li a3, 59533158
+    li a4, 1
+    j cfg_done
+cfg_16:
+    li a3, 59533158
+    li a4, 1
+    j cfg_done
+cfg_32:
+    li a3, 59533158
+    li a4, 1
+    j cfg_done
+cfg_64:
+    li a3, 59533158
+    li a4, 1
+    j cfg_done
+cfg_128:
+    li a3, 59533158
+    li a4, 1
+    j cfg_done
+vl_bad:
+    call abort
+cfg_done:
+    .chunk
+loop:
+    li t1, 8
+    beq t0, t1, body_8
+    li t1, 16
+    beq t0, t1, body_16
+    li t1, 32
+    beq t0, t1, body_32
+    li t1, 64
+    beq t0, t1, body_64
+    li t1, 128
+    beq t0, t1, body_128
+    j vl_bad
+body_8:
     .rept 2
-    addi s1, s1, 1
+    add s5, s5, s6
     .endr
-    vle64.v v0, (a1)
-    add a1, a1, t2
-    vfmul.vv v9, v0, v8
-    sub a2, a2, t0
-    bgtz a2, dist
-    vfredusum.vs v20, v9, v20
-    vcpop.m t4, v20
-    add s2, s2, t4          # center-opening cost decision
-    .rept 29
-    addi s1, s1, 1
+    la a5, fp0
+    vle64.v v0, (a5)
+    vfmul.vv v0, v0, v0
+    .rept 2
+    add s5, s5, s6
     .endr
-    addi a3, a3, -1
-    bnez a3, call
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    vfredusum.vs v0, v0, v0
+    vcpop.m t6, v20
+    .rept 30
+    add s4, s5, s3
+    .endr
+    j close
+body_16:
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v0, (a5)
+    vfmul.vv v0, v0, v0
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    vfredusum.vs v0, v0, v0
+    vcpop.m t6, v20
+    .rept 30
+    add s4, s5, s3
+    .endr
+    j close
+body_32:
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v0, (a5)
+    vfmul.vv v0, v0, v0
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    vfredusum.vs v0, v0, v0
+    vcpop.m t6, v20
+    .rept 30
+    add s4, s5, s3
+    .endr
+    j close
+body_64:
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v0, (a5)
+    vfmul.vv v0, v0, v0
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v1, (a5)
+    vfmul.vv v0, v0, v1
+    vfredusum.vs v0, v0, v0
+    vcpop.m t6, v20
+    .rept 30
+    add s4, s5, s3
+    .endr
+    j close
+body_128:
+    .rept 2
+    add s5, s5, s6
+    .endr
+    la a5, fp0
+    vle64.v v0, (a5)
+    vfmul.vv v0, v0, v0
+    vfredusum.vs v0, v0, v0
+    vcpop.m t6, v20
+    .rept 30
+    add s4, s5, s3
+    .endr
+    j close
+close:
+    sub a3, a3, a4
+    bgtz a3, loop
     ret

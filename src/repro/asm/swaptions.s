@@ -1,74 +1,307 @@
-# RVV v1.0 kernel: RiVec 'swaptions' — HJM Monte-Carlo with a VL-scaled working set — the Fig-10 LLC lever (Table 9 / Fig 10)
-# GENERATED by scripts/gen_rvv_corpus.py from the characterized
-# tracegen constants; regenerate after recalibration.  Decoded by
-# repro.core.rvv and cross-validated against tracegen.body_for at
-# every MVL (python -m repro.core.rvv --check-all).
+# swaptions: RVV v1.0 kernel emitted by repro.core.codegen -- do not edit.
+# Decodes (repro.core.rvv) to the jaxpr-lowered trace, bitwise, at
+# every effective MVL in {8/16/32/64/128/256}; the .chunk loop's bgtz
+# counter encodes the exact fractional trip count.
     .text
-    .stream hjm vl*8*350/1024
-    .stream path vl*8*350/1024
     .globl swaptions
+    .stream fp0 21.875
+    .stream fp1 43.75
+    .stream fp2 87.5
+    .stream fp3 175.0
+    .stream fp4 350.0
+    .stream fp5 700.0
 swaptions:
-    la a1, hjm
-    la a2, path
-    li a0, 597045389          # HJM path-state elements (AVL)
-    vsetvli t0, a0, e64, m1, ta, ma
-    vmv.v.i v4, 0
-    vmv.v.i v5, 0
-    vmv.v.i v6, 0
-    vmv.v.i v7, 0
-    vmv.v.i v8, 0
-    vmv.v.i v9, 0
-    vmv.v.i v10, 0
-    vmv.v.i v11, 0
-    vmv.v.i v12, 0
-    vmv.v.i v13, 0
-    vmv.v.i v14, 0
-    vmv.v.i v15, 0
-    vmv.v.i v16, 0
-    vmv.v.i v17, 0
-    vmv.v.i v18, 0
-    vmv.v.i v19, 0
-.chunk
+    vsetvli t0, zero, e64, m1
+    li t1, 8
+    beq t0, t1, cfg_8
+    li t1, 16
+    beq t0, t1, cfg_16
+    li t1, 32
+    beq t0, t1, cfg_32
+    li t1, 64
+    beq t0, t1, cfg_64
+    li t1, 128
+    beq t0, t1, cfg_128
+    li t1, 256
+    beq t0, t1, cfg_256
+    j vl_bad
+cfg_8:
+    li a3, 1252094932138337
+    li a4, 16777216
+    j cfg_done
+cfg_16:
+    li a3, 1252094932138337
+    li a4, 33554432
+    j cfg_done
+cfg_32:
+    li a3, 1252094932138337
+    li a4, 67108864
+    j cfg_done
+cfg_64:
+    li a3, 1252094932138337
+    li a4, 134217728
+    j cfg_done
+cfg_128:
+    li a3, 1252094932138337
+    li a4, 268435456
+    j cfg_done
+cfg_256:
+    li a3, 1252094932138337
+    li a4, 536870912
+    j cfg_done
+vl_bad:
+    call abort
+cfg_done:
+    .chunk
 loop:
-    vsetvli t0, a0, e64, m1, ta, ma
-    slli t2, t0, 3
+    li t1, 8
+    beq t0, t1, body_8
+    li t1, 16
+    beq t0, t1, body_16
+    li t1, 32
+    beq t0, t1, body_32
+    li t1, 64
+    beq t0, t1, body_64
+    li t1, 128
+    beq t0, t1, body_128
+    li t1, 256
+    beq t0, t1, body_256
+    j vl_bad
+body_8:
     .rept 52
-    addi s1, s1, 1
+    add s5, s5, s6
     .endr
-    vle64.v v0, (a1)
-    add a1, a1, t2
-    vle64.v v1, (a1)
-    add a1, a1, t2
-    vle64.v v2, (a1)
-    add a1, a1, t2
-    vle64.v v3, (a1)
-    add a1, a1, t2
-    vfadd.vv v4, v9, v15
-    vfadd.vv v5, v10, v16
-    vfpow.vv v6, v11, v17
-    vfmul.vv v7, v12, v18
-    vfmul.vv v8, v13, v19
-    vfadd.vv v9, v14, v4
-    vfmul.vv v10, v15, v5
-    vfpow.vv v11, v16, v6
-    vfmul.vv v12, v17, v7
-    vfadd.vv v13, v18, v8
-    vfadd.vv v14, v19, v9
-    vfmul.vv v15, v4, v10
-    vfadd.vv v16, v5, v11
-    vfadd.vv v17, v6, v12
-    vfadd.vv v18, v7, v13
-    vfmul.vv v19, v8, v14
-    vfadd.vv v4, v9, v15
-    vfadd.vv v5, v10, v16
-    vfmul.vv v6, v11, v17
-    vfadd.vv v7, v12, v18
-    vfadd.vv v8, v13, v19
-    vfdiv.vv v9, v14, v4
-    vfmul.vv v10, v15, v5
-    vfadd.vv v11, v16, v6
-    vse64.v v10, (a2)
-    add a2, a2, t2
-    sub a0, a0, t0
-    bgtz a0, loop
+    la a5, fp0
+    vle64.v v0, (a5)
+    la a5, fp0
+    vle64.v v0, (a5)
+    la a5, fp0
+    vle64.v v0, (a5)
+    la a5, fp0
+    vle64.v v0, (a5)
+    vid.v v0
+    vid.v v1
+    vfexp.v v2, ft0
+    vfmul.vf v3, v0, ft0
+    vfmul.vf v4, v1, ft0
+    vfadd.vv v0, v2, v0
+    vfmul.vv v1, v3, v1
+    vfexp.v v2, v4
+    vfmul.vv v3, v0, v3
+    vfadd.vv v4, v1, v4
+    vfadd.vv v0, v2, v0
+    vfmul.vv v1, v3, v1
+    vfadd.vv v2, v4, v2
+    vfadd.vv v3, v0, v3
+    vfadd.vv v4, v1, v4
+    vfmul.vv v0, v2, v0
+    vfadd.vv v1, v3, v1
+    vfadd.vv v2, v4, v2
+    vfmul.vv v3, v0, v3
+    vfadd.vv v4, v1, v4
+    vfadd.vv v0, v2, v0
+    vfdiv.vv v1, v3, v1
+    vfmul.vv v1, v4, v2
+    vfadd.vv v0, v0, v3
+    la a5, fp0
+    vse64.v v1, (a5)
+    j close
+body_16:
+    .rept 52
+    add s5, s5, s6
+    .endr
+    la a5, fp1
+    vle64.v v0, (a5)
+    la a5, fp1
+    vle64.v v0, (a5)
+    la a5, fp1
+    vle64.v v0, (a5)
+    la a5, fp1
+    vle64.v v0, (a5)
+    vid.v v0
+    vid.v v1
+    vfexp.v v2, ft0
+    vfmul.vf v3, v0, ft0
+    vfmul.vf v4, v1, ft0
+    vfadd.vv v0, v2, v0
+    vfmul.vv v1, v3, v1
+    vfexp.v v2, v4
+    vfmul.vv v3, v0, v3
+    vfadd.vv v4, v1, v4
+    vfadd.vv v0, v2, v0
+    vfmul.vv v1, v3, v1
+    vfadd.vv v2, v4, v2
+    vfadd.vv v3, v0, v3
+    vfadd.vv v4, v1, v4
+    vfmul.vv v0, v2, v0
+    vfadd.vv v1, v3, v1
+    vfadd.vv v2, v4, v2
+    vfmul.vv v3, v0, v3
+    vfadd.vv v4, v1, v4
+    vfadd.vv v0, v2, v0
+    vfdiv.vv v1, v3, v1
+    vfmul.vv v1, v4, v2
+    vfadd.vv v0, v0, v3
+    la a5, fp1
+    vse64.v v1, (a5)
+    j close
+body_32:
+    .rept 52
+    add s5, s5, s6
+    .endr
+    la a5, fp2
+    vle64.v v0, (a5)
+    la a5, fp2
+    vle64.v v0, (a5)
+    la a5, fp2
+    vle64.v v0, (a5)
+    la a5, fp2
+    vle64.v v0, (a5)
+    vid.v v0
+    vid.v v1
+    vfexp.v v2, ft0
+    vfmul.vf v3, v0, ft0
+    vfmul.vf v4, v1, ft0
+    vfadd.vv v0, v2, v0
+    vfmul.vv v1, v3, v1
+    vfexp.v v2, v4
+    vfmul.vv v3, v0, v3
+    vfadd.vv v4, v1, v4
+    vfadd.vv v0, v2, v0
+    vfmul.vv v1, v3, v1
+    vfadd.vv v2, v4, v2
+    vfadd.vv v3, v0, v3
+    vfadd.vv v4, v1, v4
+    vfmul.vv v0, v2, v0
+    vfadd.vv v1, v3, v1
+    vfadd.vv v2, v4, v2
+    vfmul.vv v3, v0, v3
+    vfadd.vv v4, v1, v4
+    vfadd.vv v0, v2, v0
+    vfdiv.vv v1, v3, v1
+    vfmul.vv v1, v4, v2
+    vfadd.vv v0, v0, v3
+    la a5, fp2
+    vse64.v v1, (a5)
+    j close
+body_64:
+    .rept 52
+    add s5, s5, s6
+    .endr
+    la a5, fp3
+    vle64.v v0, (a5)
+    la a5, fp3
+    vle64.v v0, (a5)
+    la a5, fp3
+    vle64.v v0, (a5)
+    la a5, fp3
+    vle64.v v0, (a5)
+    vid.v v0
+    vid.v v1
+    vfexp.v v2, ft0
+    vfmul.vf v3, v0, ft0
+    vfmul.vf v4, v1, ft0
+    vfadd.vv v0, v2, v0
+    vfmul.vv v1, v3, v1
+    vfexp.v v2, v4
+    vfmul.vv v3, v0, v3
+    vfadd.vv v4, v1, v4
+    vfadd.vv v0, v2, v0
+    vfmul.vv v1, v3, v1
+    vfadd.vv v2, v4, v2
+    vfadd.vv v3, v0, v3
+    vfadd.vv v4, v1, v4
+    vfmul.vv v0, v2, v0
+    vfadd.vv v1, v3, v1
+    vfadd.vv v2, v4, v2
+    vfmul.vv v3, v0, v3
+    vfadd.vv v4, v1, v4
+    vfadd.vv v0, v2, v0
+    vfdiv.vv v1, v3, v1
+    vfmul.vv v1, v4, v2
+    vfadd.vv v0, v0, v3
+    la a5, fp3
+    vse64.v v1, (a5)
+    j close
+body_128:
+    .rept 52
+    add s5, s5, s6
+    .endr
+    la a5, fp4
+    vle64.v v0, (a5)
+    la a5, fp4
+    vle64.v v0, (a5)
+    la a5, fp4
+    vle64.v v0, (a5)
+    la a5, fp4
+    vle64.v v0, (a5)
+    vid.v v0
+    vid.v v1
+    vfexp.v v2, ft0
+    vfmul.vf v3, v0, ft0
+    vfmul.vf v4, v1, ft0
+    vfadd.vv v0, v2, v0
+    vfmul.vv v1, v3, v1
+    vfexp.v v2, v4
+    vfmul.vv v3, v0, v3
+    vfadd.vv v4, v1, v4
+    vfadd.vv v0, v2, v0
+    vfmul.vv v1, v3, v1
+    vfadd.vv v2, v4, v2
+    vfadd.vv v3, v0, v3
+    vfadd.vv v4, v1, v4
+    vfmul.vv v0, v2, v0
+    vfadd.vv v1, v3, v1
+    vfadd.vv v2, v4, v2
+    vfmul.vv v3, v0, v3
+    vfadd.vv v4, v1, v4
+    vfadd.vv v0, v2, v0
+    vfdiv.vv v1, v3, v1
+    vfmul.vv v1, v4, v2
+    vfadd.vv v0, v0, v3
+    la a5, fp4
+    vse64.v v1, (a5)
+    j close
+body_256:
+    .rept 52
+    add s5, s5, s6
+    .endr
+    la a5, fp5
+    vle64.v v0, (a5)
+    la a5, fp5
+    vle64.v v0, (a5)
+    la a5, fp5
+    vle64.v v0, (a5)
+    la a5, fp5
+    vle64.v v0, (a5)
+    vid.v v0
+    vid.v v1
+    vfexp.v v2, ft0
+    vfmul.vf v3, v0, ft0
+    vfmul.vf v4, v1, ft0
+    vfadd.vv v0, v2, v0
+    vfmul.vv v1, v3, v1
+    vfexp.v v2, v4
+    vfmul.vv v3, v0, v3
+    vfadd.vv v4, v1, v4
+    vfadd.vv v0, v2, v0
+    vfmul.vv v1, v3, v1
+    vfadd.vv v2, v4, v2
+    vfadd.vv v3, v0, v3
+    vfadd.vv v4, v1, v4
+    vfmul.vv v0, v2, v0
+    vfadd.vv v1, v3, v1
+    vfadd.vv v2, v4, v2
+    vfmul.vv v3, v0, v3
+    vfadd.vv v4, v1, v4
+    vfadd.vv v0, v2, v0
+    vfdiv.vv v1, v3, v1
+    vfmul.vv v1, v4, v2
+    vfadd.vv v0, v0, v3
+    la a5, fp5
+    vse64.v v1, (a5)
+    j close
+close:
+    sub a3, a3, a4
+    bgtz a3, loop
     ret

@@ -471,6 +471,19 @@ class Lowered:
     regs_used: int       # distinct registers touched (cf. isa.trace_registers)
 
 
+def _needs_idx_reg(op: dict) -> bool:
+    """Does this vop carry an indexed stream access with no explicit index
+    vector?  Real RVV spells these ``vluxei*``/``vsuxei*``, whose index
+    vector is an architectural register source — the lowered trace reserves
+    the top register for it so the decoded assembly round-trips bitwise."""
+    if op["op"] == "load":
+        return (op["stream"].pattern == isa.MEM_INDEXED
+                and op.get("idx") is None)
+    if op["op"] == "store":
+        return op["stream"].pattern == isa.MEM_INDEXED
+    return False
+
+
 def lower(segments, n_regs: int = N_LOGICAL_REGS) -> Lowered:
     """Lower a kernel spec (list of segments) to a trace.
 
@@ -479,6 +492,12 @@ def lower(segments, n_regs: int = N_LOGICAL_REGS) -> Lowered:
     the value's last use; exceeding ``n_regs`` simultaneously-live values is
     a :class:`FrontendError` (the spec must spill explicitly, as canneal's
     ``RawRecords`` moves do).
+
+    Indexed stream accesses (``MEM_INDEXED`` loads without an explicit
+    gather index, and every indexed store) consume an implicit index vector:
+    the allocator reserves the highest register (``n_regs - 1``) for it and
+    records it as a source operand — exactly what ``vluxei64.v``/
+    ``vsuxei64.v`` decode to, so the RVV round trip is bitwise.
     """
     w = _Walker()
     for seg in segments:
@@ -491,11 +510,14 @@ def lower(segments, n_regs: int = N_LOGICAL_REGS) -> Lowered:
         for t in _op_uses(op):
             last[t] = i
 
-    free = list(range(n_regs))
+    idx_reg = n_regs - 1 if any(_needs_idx_reg(op) for op in ops) else -1
+    free = [r for r in range(n_regs) if r != idx_reg]
     heapq.heapify(free)
     reg: dict[int, int] = {}
     max_live = 0
     used: set[int] = set()
+    if idx_reg >= 0:
+        used.add(idx_reg)
     b = isa.TraceBuilder()
     for i, op in enumerate(ops):
         sregs = []
@@ -518,11 +540,12 @@ def lower(segments, n_regs: int = N_LOGICAL_REGS) -> Lowered:
             max_live = max(max_live, n_regs - len(free))
             if last.get(t, -1) <= i:        # dead value: reg recycles
                 heapq.heappush(free, reg.pop(t))
-        _emit_record(b, op, sregs, dreg)
+        _emit_record(b, op, sregs, dreg, idx_reg)
     return Lowered(b.build(), max_live, len(used))
 
 
-def _emit_record(b: isa.TraceBuilder, op: dict, sregs: list, dreg: int):
+def _emit_record(b: isa.TraceBuilder, op: dict, sregs: list, dreg: int,
+                 idx_reg: int = -1):
     kind = op["op"]
     if kind == "scalar":
         b.scalar(op["count"], fu=op["fu"], dep_scalar=op["dep"])
@@ -534,11 +557,16 @@ def _emit_record(b: isa.TraceBuilder, op: dict, sregs: list, dreg: int):
                         footprint_kb=s.footprint_kb)
         if sregs:                            # gather: consumes an index vector
             rec.update(n_src=1, src1=sregs[0])
+        elif s.pattern == isa.MEM_INDEXED:   # implicit vluxei* index vector
+            rec.update(n_src=1, src1=idx_reg)
         b.raw(rec)
     elif kind == "store":
         s = op["stream"]
-        b.store(op["vl"], src1=sregs[0], pattern=s.pattern,
-                footprint_kb=s.footprint_kb)
+        rec = isa.vstore(op["vl"], src1=sregs[0], pattern=s.pattern,
+                         footprint_kb=s.footprint_kb)
+        if s.pattern == isa.MEM_INDEXED:     # implicit vsuxei* index vector
+            rec.update(n_src=2, src2=idx_reg)
+        b.raw(rec)
     elif kind == "arith":
         b.arith(op["vl"], fu=op["fu"], n_src=op["n_src"],
                 src1=sregs[0] if sregs else -1,

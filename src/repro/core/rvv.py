@@ -1091,7 +1091,7 @@ def cross_validate_all(apps=None, cfgs=None) -> list:
     from repro.core import engine as eng
     from repro.core import tracegen
     if apps is None:
-        apps = [a for a in tracegen.RIVEC_APPS if tracegen.APPS[a].asm]
+        apps = [a for a in sorted(tracegen.APPS) if tracegen.APPS[a].asm]
     if cfgs is None:
         cfgs = [eng.VectorEngineConfig(mvl=m, lanes=4) for m in CHECK_MVLS]
 
@@ -1112,7 +1112,7 @@ def check_all(verbose: bool = True) -> bool:
     reports = cross_validate_all()
     ok = crossval.print_reports(reports, "rvv cross-validation") \
         if verbose else all(r.ok for r in reports)
-    for app in [a for a in tracegen.RIVEC_APPS if tracegen.APPS[a].asm]:
+    for app in [a for a in sorted(tracegen.APPS) if tracegen.APPS[a].asm]:
         for m in CHECK_MVLS:
             cfg = eng.VectorEngineConfig(mvl=m, lanes=4)
             eff = suite.effective_mvl(app, cfg)

@@ -221,5 +221,6 @@ def make_apps(App, Counts) -> dict:
             chunks_fn,
             _LazyMix(name),
             kernel=kernel,
+            asm=f"{name}.s",
             notes=NOTES[name])
     return apps

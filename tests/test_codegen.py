@@ -1,0 +1,222 @@
+"""RVV codegen: jaxpr -> assembly emission round-tripped through the
+decoder.  The property tier fuzzes random well-formed kernel specs through
+emit -> decode -> fingerprint comparison at every MVL of the paper grid;
+unit tiers pin the emitter's loud-error contract, the malformed-emission
+safety net (``isa.validate_trace``), the generated-corpus round trip, and
+the ML ``:asm`` variants riding the serving layers."""
+import numpy as np
+import pytest
+
+try:  # hypothesis is optional (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover
+    from repro.testing.hypothesis_shim import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import codegen, crossval, dse, engine as eng
+from repro.core import frontend as fe
+from repro.core import isa, rvv, suite, tracegen
+from repro.serve.sim_service import SimService
+
+MVLS = rvv.CHECK_MVLS
+
+
+# -------------------------------------------------------- fuzz property tier
+
+_FUZZ_MIXES = (
+    {"simple": 1.0},
+    {"simple": 0.5, "mul": 0.5},
+    {"simple": 0.5, "mul": 0.35, "div": 0.05, "trans": 0.10},
+    {"simple": 0.3, "mul": 0.3, "div": 0.2, "trans": 0.2},
+)
+
+
+def _random_spec(seed: int):
+    """A random *well-formed* kernel spec built from the frontend's public
+    primitives: 1-3 input streams (unit or strided), a random-length
+    ``chain_ops`` run over a random window, optionally a reduction whose
+    result the scalar core consumes (the dep_scalar round trip), and an
+    output stream store.  All randomness is drawn up front so the returned
+    spec is a pure function of (mvl, cfg), like ``App.kernel``."""
+    rng = np.random.RandomState(seed)
+    n_streams = int(rng.randint(1, 4))
+    patterns = [isa.MEM_UNIT, isa.MEM_UNIT, isa.MEM_STRIDED]
+    streams = tuple(
+        fe.Stream(f"s{i}", float(rng.choice([8.0, 64.0, 3072.0])),
+                  pattern=patterns[rng.randint(3)])
+        for i in range(n_streams))
+    n_ops = int(rng.randint(4, 20))
+    mix = _FUZZ_MIXES[rng.randint(len(_FUZZ_MIXES))]
+    window = int((4, 8, 16)[rng.randint(3)])
+    seed_streams = bool(rng.randint(2))
+    with_reduce = bool(rng.randint(2))
+    with_dep = with_reduce and bool(rng.randint(2))
+    scalar_work = float(rng.randint(2, 40))
+    avl = int(rng.randint(300, 5000))
+
+    def spec(mvl, cfg):
+        vl = min(mvl, cfg.mvl) if cfg else mvl
+
+        def fn(*vals):
+            seeds = vals if seed_streams else (1.5,)
+            win = fe.chain_ops(n_ops, mix, seeds=seeds, vl=vl,
+                               window=window)
+            r = win[min(3, window - 1)]
+            if with_reduce:
+                s = jnp.sum(r)          # noqa: F841  scalar core consumes it
+            return r
+
+        segs = [fe.KernelBody(fn, vl, ins=streams,
+                              outs=(fe.Stream("o", 64.0),))]
+        if with_dep:
+            segs.append(fe.ScalarWork(scalar_work, dep_scalar=True))
+        else:
+            segs.append(fe.ScalarWork(scalar_work))
+        return segs
+
+    return spec, avl
+
+
+seeds = st.integers(min_value=0, max_value=10 ** 9)
+
+
+@settings(max_examples=25, deadline=None, derandomize=True)
+@given(seeds)
+def test_fuzzed_kernels_round_trip_bitwise_at_every_mvl(seed):
+    """ISSUE acceptance property: for >= 25 random well-formed kernels,
+    ``decode(emit(kernel))`` is bitwise fingerprint-equal to the direct
+    jaxpr lowering at every MVL of the paper grid, with the exact
+    fractional chunk count and clean trace invariants."""
+    spec, avl = _random_spec(seed)
+    text = codegen.emit_kernel(spec, f"fuzz{seed}", avl)
+    for m in MVLS:
+        cfg = eng.VectorEngineConfig(mvl=m, lanes=4)
+        d = rvv.decode(text, m, cfg, path=f"<fuzz:{seed}>")
+        want = fe.lower(spec(m, cfg)).trace
+        assert len(d.trace) == len(want), (seed, m)
+        assert isa.trace_fingerprint(d.trace) == \
+            isa.trace_fingerprint(want), (seed, m)
+        assert d.chunks == avl / m, (seed, m, d.chunks)
+        assert d.validate() == [], (seed, m, d.validate())
+
+
+# ------------------------------------------------- malformed-emission safety
+
+def _saxpy_spec(mvl, cfg):
+    vl = min(mvl, cfg.mvl) if cfg else mvl
+    return [fe.KernelBody(lambda x, y: x * 2.0 + y, vl,
+                          ins=(fe.Stream("x", 64.0), fe.Stream("y", 64.0)),
+                          outs=(fe.Stream("o", 64.0),))]
+
+
+def test_validate_trace_catches_malformed_emissions():
+    """Satellite: the decoder + ``isa.validate_trace`` safety net flags
+    emissions whose bodies violate the IR invariants — sources that dangle
+    without their prologue definitions, and VLs above the machine MVL."""
+    def gather_spec(mvl, cfg):
+        vl = min(mvl, cfg.mvl) if cfg else mvl
+        return [fe.KernelBody(
+            lambda t, y: t + y, vl,
+            ins=(fe.Stream("t", 3072.0, pattern=isa.MEM_INDEXED),
+                 fe.Stream("y", 64.0)),
+            outs=(fe.Stream("o", 64.0),))]
+
+    text = codegen.emit_kernel(gather_spec, "gather", 4096, mvls=(64,))
+    d = rvv.decode(text, 64, eng.VectorEngineConfig(mvl=64, lanes=4))
+    assert d.validate() == []
+    # same body, but claim a smaller machine: the 64-element records violate
+    # vl <= mvl
+    assert any("vl" in p for p in
+               isa.validate_trace(d.trace, 8, predefined=d.prologue_defs))
+    # same body, but drop the prologue definitions: the gather's index
+    # vector (defined by the prologue vid.v) dangles
+    assert isa.validate_trace(d.trace, 64, predefined=frozenset()) != []
+
+
+def test_corrupted_emission_text_is_loud():
+    """Hand-corrupt generated text: the decoder refuses streams whose
+    register dataflow no longer closes instead of guessing."""
+    text = codegen.emit_kernel(_saxpy_spec, "saxpy", 4096, mvls=(64,))
+    # reading a register the corrupted text never writes is loud
+    broken = text.replace("vle64.v v0", "vle64.v v9", 1)
+    with pytest.raises(rvv.RvvError, match="read before any write"):
+        rvv.decode(broken, 64)
+    # an undispatched VL reaches the abort trampoline and is loud too
+    with pytest.raises(rvv.RvvError, match="not decodable"):
+        rvv.decode(text, 128, eng.VectorEngineConfig(mvl=128, lanes=4))
+
+
+def test_emitter_rejects_unspellable_records():
+    def mk(**kw):
+        rec = dict(kind=isa.VARITH, vl=8, fu=isa.FU_SIMPLE, n_src=2,
+                   src1=1, src2=2, dst=3, mem_pattern=0,
+                   footprint_kb=0.0, scalar_count=0, dep_scalar=False)
+        rec.update(kw)
+        return rec
+    emit1 = lambda recs: codegen.emit("t", {8: recs}, {8: 1.0}, {8: 8})
+    with pytest.raises(codegen.CodegenError, match="no scalar spelling"):
+        emit1([mk(kind=isa.SCALAR_BLOCK, vl=0, fu=isa.FU_TRANS, n_src=0,
+                  src1=-1, src2=-1, dst=-1, scalar_count=4)])
+    with pytest.raises(codegen.CodegenError, match="coalesce"):
+        emit1([mk(kind=isa.SCALAR_BLOCK, vl=0, n_src=0, src1=-1, src2=-1,
+                  dst=-1, scalar_count=4),
+               mk(kind=isa.SCALAR_BLOCK, vl=0, n_src=0, src1=-1, src2=-1,
+                  dst=-1, scalar_count=4)])
+    with pytest.raises(codegen.CodegenError, match="FU_SIMPLE"):
+        emit1([mk(), mk(kind=isa.VREDUCE, fu=isa.FU_MUL, n_src=1, src1=3,
+                        src2=-1, dst=4)])
+    with pytest.raises(codegen.CodegenError, match="NOP"):
+        emit1([mk(), mk(kind=isa.NOP, vl=0, n_src=0, src1=-1, src2=-1,
+                        dst=-1)])
+
+
+# --------------------------------------------------- generated-corpus gate
+
+def test_generated_corpus_round_trips():
+    """ISSUE acceptance (test-tier half; ci.sh --check-all runs the full
+    grid): every app with a kernel= spec round-trips emit -> decode ->
+    fingerprint-equal to the jaxpr lowering, with the characterized chunk
+    count, at the grid's extremes."""
+    reports = crossval.round_trip_all(mvls=(8, 256))
+    assert {r.app for r in reports} == \
+        {a for a in tracegen.APPS if tracegen.APPS[a].kernel is not None}
+    assert len({r.app for r in reports}) == 10
+    bad = [(r.app, r.mvl, r.problems) for r in reports if not r.ok]
+    assert not bad, bad
+
+
+def test_emitted_app_matches_checked_in_corpus():
+    """The committed .s files are exactly what the emitter produces (the
+    ci.sh corpus-drift gate pins all ten; one here keeps the contract in
+    the test tier)."""
+    import os
+    path = os.path.join(os.path.dirname(__file__), "..", "src", "repro",
+                        "asm", "blackscholes.s")
+    with open(path) as f:
+        assert f.read() == codegen.emit_app("blackscholes")
+
+
+# ------------------------------------------- ML :asm variants in the layers
+
+def test_ml_asm_variants_ride_dse_explore():
+    sp = dse.DesignSpace.of("t", mvl=(16, 64), lanes=(4,))
+    res = dse.explore(sp, apps=("flash_attention:asm", "ssd_scan:asm"))
+    assert len(res.records) == 4
+    for r in res.records:
+        base = r.app.removesuffix(":asm")
+        want = suite.speedup(base, r.cfg)
+        # bitwise-identical body + identical chunk model -> same speedup
+        assert abs(r.speedup - want) <= 1e-5 * want, (r.app, r.cfg)
+
+
+def test_ml_asm_variants_ride_sim_service():
+    svc = SimService()
+    cfg = eng.VectorEngineConfig(mvl=64, lanes=4)
+    svc.submit("decode_attention:asm", cfg)
+    svc.submit("decode_attention", cfg)
+    svc.drain()
+    by_app = {r.app: r for r in svc.completed}
+    asm, direct = by_app["decode_attention:asm"], by_app["decode_attention"]
+    assert asm.steady_ns == direct.steady_ns
+    assert asm.runtime_ns == direct.runtime_ns

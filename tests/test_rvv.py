@@ -276,27 +276,31 @@ def test_saxpy_decodes_and_simulates_end_to_end():
 
 def test_corpus_crossval_reference_configs():
     """ISSUE acceptance (test-tier half; ci.sh runs the full per-MVL grid):
-    decoded corpus bodies match the hand-coded traces — static mixes exact,
-    steady-state time within 5%."""
+    the generated corpus decodes to bodies that match the hand-coded traces
+    — static mixes exact, steady-state time within 5% — for all ten apps
+    (the RiVec seven plus the codegen-emitted ML workloads)."""
     cfgs = [eng.VectorEngineConfig(mvl=64, lanes=4),
             eng.VectorEngineConfig(mvl=16, lanes=2)]
     reports = rvv.cross_validate_all(cfgs=cfgs)
-    assert {r.app for r in reports} == set(tracegen.RIVEC_APPS)
+    corpus = {a for a in tracegen.APPS if tracegen.APPS[a].asm}
+    assert {r.app for r in reports} == corpus
+    assert corpus >= set(tracegen.RIVEC_APPS) and len(corpus) == 10
     bad = [(r.app, r.cfg_label, r.time_rel_err) for r in reports if not r.ok]
     assert not bad, bad
-    # five of the seven decode BITWISE-identical to the hand-coded bodies
-    # (canneal carries the honest index-vector dependency; streamcluster's
-    # strip-mined dist loop reuses registers the hand body cycles)
+    # The ML workloads decode BITWISE-identical to their suite bodies (both
+    # sides are the jaxpr lowering).  The RiVec seven differ from the
+    # hand-coded bodies in register naming/source structure — those are held
+    # bitwise to the jaxpr lowering by the codegen round-trip gate instead
+    # (test_generated_corpus_round_trips / --check-all).
     by_app = {}
     for r in reports:
         by_app.setdefault(r.app, []).append(r.fingerprint_eq)
     exact = {a for a, v in by_app.items() if all(v)}
-    assert exact >= {"blackscholes", "jacobi-2d", "particlefilter",
-                     "pathfinder", "swaptions"}
+    assert exact >= {"flash_attention", "decode_attention", "ssd_scan"}
 
 
 def test_asm_chunk_counts_match_characterized_closed_forms():
-    for app in tracegen.RIVEC_APPS:
+    for app in (a for a in tracegen.APPS if tracegen.APPS[a].asm):
         for mvl in (8, 64, 256):
             cfg = eng.VectorEngineConfig(mvl=mvl, lanes=4)
             eff = suite.effective_mvl(app, cfg)
@@ -309,7 +313,7 @@ def test_corpus_bodies_pass_isa_invariants():
     """Satellite: every decoded corpus body satisfies the trace invariants
     (registers in range, vl <= mvl, no dangling sources given the
     prologue definitions)."""
-    for app in tracegen.RIVEC_APPS:
+    for app in (a for a in tracegen.APPS if tracegen.APPS[a].asm):
         cfg = eng.VectorEngineConfig(mvl=64, lanes=4)
         d = rvv.decode_app(app, suite.effective_mvl(app, cfg), cfg)
         assert d.validate() == [], app
@@ -317,16 +321,21 @@ def test_corpus_bodies_pass_isa_invariants():
 
 def test_asm_variant_rides_the_batched_sweep():
     table = suite.sweep_all(["blackscholes", "blackscholes:asm",
-                             "canneal", "canneal:asm"],
+                             "canneal", "canneal:asm",
+                             "flash_attention", "flash_attention:asm"],
                             mvls=(8, 64), lanes=(1, 8))
     for cell in table["blackscholes"]:
-        # bitwise-identical body + identical chunk model -> identical speedup
-        assert table["blackscholes:asm"][cell] == \
-            table["blackscholes"][cell]
-        # canneal's decoded body differs only by the index-vector reads
-        rel = abs(table["canneal:asm"][cell] - table["canneal"][cell]) \
-            / table["canneal"][cell]
-        assert rel < 0.02, (cell, rel)
+        # bitwise-identical body (the emitted corpus IS the jaxpr lowering)
+        # + identical chunk model -> identical speedup
+        assert table["flash_attention:asm"][cell] == \
+            table["flash_attention"][cell]
+        # the RiVec decoded bodies differ from the hand-coded suite bodies
+        # only in register/source structure: speedups track within crossval
+        # timing tolerance
+        for app in ("blackscholes", "canneal"):
+            rel = abs(table[f"{app}:asm"][cell] - table[app][cell]) \
+                / table[app][cell]
+            assert rel < 0.05, (app, cell, rel)
 
 
 # ------------------------------------------------------ fuzz property tier

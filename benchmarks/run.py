@@ -26,7 +26,7 @@ def _t(fn, *args, reps=3):
 
 
 # machine-readable results collected while the driver runs; main() writes
-# them to --bench-json (BENCH_pr7.json by default)
+# them to --bench-json (BENCH_pr8.json by default)
 _BENCH: dict = {}
 
 
@@ -310,6 +310,121 @@ def dse_study(quick: bool = False, cache_path: str | None = None,
     return rows
 
 
+def surrogate_rows(quick: bool = False, cache_path: str | None = None,
+                   seed: int = 0):
+    """Surrogate-guided search acceptance rows (ISSUE 8).
+
+    Full mode: exhaustively explore the 1536-point ``SPACE_FULL`` over all
+    10 apps (the truth frontiers AND the ~15k training rows), fit the MLP
+    surrogate, then surrogate-search the 1,244,160-point ``SPACE_HUGE`` and
+    measure (a) wall-clock vs the exact explore, (b) surrogate scoring
+    throughput vs exact simulation throughput, and (c) recall of each
+    exact-verified search frontier against the exhaustive truth frontier
+    (acceptance: >= 0.9).  A second model trained WITHOUT the last app
+    provides the honest held-out-app error CDF.  Quick mode: the same
+    pipeline on SPACE_QUICK -> SPACE_10K with 3 apps.
+    """
+    from repro.configs import vector_engine as vcfg
+    from repro.core import dse, surrogate, search, tracegen
+    if quick:
+        truth_space, search_space = vcfg.SPACE_QUICK, vcfg.SPACE_10K
+        apps = vcfg.SPACE_PRESET_APPS["quick"]
+        steps = 800
+    else:
+        truth_space, search_space = vcfg.SPACE_FULL, vcfg.SPACE_HUGE
+        apps = tuple(sorted(tracegen.APPS))
+        steps = 2000
+    cache = dse.ResultCache(cache_path)
+
+    t0 = time.perf_counter()
+    truth = dse.explore(truth_space, apps, cache=cache)
+    t_exact = time.perf_counter() - t0
+    rows_lab = cache.export_training_rows(apps, truth_space)
+
+    t0 = time.perf_counter()
+    model = surrogate.fit(rows_lab, steps=steps, seed=seed)
+    t_fit = time.perf_counter() - t0
+    fit_card = surrogate.scorecard(model, rows_lab)
+
+    # honest generalization: a second model that never saw the last app
+    holdout = apps[-1]
+    t0 = time.perf_counter()
+    ho_model = surrogate.fit([r for r in rows_lab if r["app"] != holdout],
+                             steps=steps, seed=seed)
+    t_fit_ho = time.perf_counter() - t0
+    ho_rows = [r for r in rows_lab if r["app"] == holdout]
+    # the error CDF over ONLY the never-seen app's cells — the honest
+    # unseen-workload generalization number
+    ho_card = surrogate.scorecard(ho_model, ho_rows, holdout_app=holdout)
+
+    # pure scoring throughput: one app across the whole search space
+    scorer = surrogate.SpaceScorer(model, search_space, apps[0])
+    idx = np.arange(search_space.size(), dtype=np.int64)
+    scorer.score(idx[: surrogate.SCORE_BATCH])          # compile
+    t0 = time.perf_counter()
+    scorer.score(idx)
+    t_score = time.perf_counter() - t0
+    score_pts_s = search_space.size() / t_score
+    exact_cells_s = len(truth.records) / t_exact
+
+    t0 = time.perf_counter()
+    res = search.search(search_space, apps, model, cache=cache, seed=seed)
+    t_search = time.perf_counter() - t0
+    n_checked = search._verify_exact(res, cache)
+
+    tf = truth.frontiers()
+    recall = {a: search.frontier_recall(res.frontiers[a], tf[a])
+              for a in apps}
+    rmean = float(np.mean(list(recall.values())))
+    rmin = min(recall.values())
+    t_pipeline = t_fit + t_search
+    _BENCH["surrogate"] = {
+        "truth_space": truth_space.name,
+        "search_space": search_space.name,
+        "search_space_size": search_space.size(),
+        "apps": list(apps),
+        "n_training_rows": len(rows_lab),
+        "exact_wall_s": t_exact,
+        "train_s": t_fit,
+        "train_holdout_s": t_fit_ho,
+        "search_wall_s": t_search,
+        "pipeline_wall_s": t_pipeline,
+        "score_throughput_pts_s": score_pts_s,
+        "exact_throughput_cells_s": exact_cells_s,
+        "recall_at_frontier": recall,
+        "recall_mean": rmean,
+        "recall_min": rmin,
+        "frontier_points_exact_verified": n_checked,
+        "frontier_fingerprint": search.frontier_fingerprint(res),
+        "search_stats": res.stats,
+        "fit_error_cdf": {k: fit_card[k] for k in
+                          ("rel_err_p50", "rel_err_p90", "rel_err_p99",
+                           "rel_err_max", "spearman_all")},
+        "holdout_app": holdout,
+        "holdout_error_cdf": {k: ho_card[k] for k in
+                              ("rel_err_p50", "rel_err_p90", "rel_err_p99",
+                               "rel_err_max", "spearman_all")},
+    }
+    rows = [
+        (f"surrogate_train_{len(rows_lab)}rows", t_fit * 1e6,
+         f"steps={steps}|final_loss={model.meta['final_loss']:.2e}"
+         f"|p50={fit_card['rel_err_p50']:.4f}"
+         f"|p90={fit_card['rel_err_p90']:.4f}"),
+        (f"surrogate_score_{search_space.name}", t_score * 1e6,
+         f"{score_pts_s:,.0f}pts/s_vs_exact_{exact_cells_s:.0f}cells/s"
+         f"|x{score_pts_s / exact_cells_s:,.0f}"),
+        (f"surrogate_search_{search_space.name}_{search_space.size()}cfg",
+         t_search * 1e6,
+         f"pipeline_s={t_pipeline:.1f}|exact_s={t_exact:.1f}"
+         f"|scored={res.stats['n_scored']}|verified={n_checked}"),
+        (f"surrogate_recall_{truth_space.name}_truth", 0.0,
+         f"mean={rmean:.3f}|min={rmin:.3f}"
+         f"|holdout_{holdout}_p50={ho_card['rel_err_p50']:.4f}"
+         f"|holdout_spearman={ho_card['spearman_all']:.4f}"),
+    ]
+    return rows
+
+
 def serve_rows(quick: bool = False, cache_path: str | None = None,
                seed: int = 0):
     """Simulation-service acceptance rows: sustained throughput and p50/p99
@@ -419,21 +534,36 @@ def main(argv=None) -> None:
                          "sustained throughput, p50/p99 latency, zero "
                          "steady-state recompiles; the repeat pass must be "
                          ">=99%% ResultCache hits, bitwise-identical")
+    ap.add_argument("--surrogate", action="store_true",
+                    help="surrogate-guided search rows only: exhaustive "
+                         "truth explore (SPACE_QUICK/--quick or SPACE_FULL), "
+                         "train the MLP cost model on the mined cache rows, "
+                         "search SPACE_10K/SPACE_HUGE, report train "
+                         "wall-clock, scoring throughput, recall@frontier "
+                         "vs exhaustive truth, and the held-out-app error "
+                         "CDF")
     ap.add_argument("--dse-cache", default=os.path.join(
         os.path.dirname(__file__), "..", "results", "dse_cache.jsonl"),
         help="persistent DSE result cache (JSONL)")
+    ap.add_argument("--surrogate-cache", default=os.path.join(
+        os.path.dirname(__file__), "..", "results", "surrogate_cache.jsonl"),
+        help="persistent result cache for the surrogate truth explore + "
+             "exact re-simulation (JSONL)")
     ap.add_argument("--serve-cache", default=os.path.join(
         os.path.dirname(__file__), "..", "results", "serve_cache.jsonl"),
         help="persistent simulation-service result cache (JSONL)")
     ap.add_argument("--dse-budget-kb", type=float, default=512.0)
     ap.add_argument("--bench-json", default=os.path.join(
-        os.path.dirname(__file__), "..", "BENCH_pr7.json"),
+        os.path.dirname(__file__), "..", "BENCH_pr8.json"),
         help="machine-readable results path (sweep wall-clock, batched "
              "speedup, per-app steady-state times, crossval verdicts "
              "incl. the RVV frontend, DSE frontiers + cache stats, "
-             "serving throughput/latency)")
+             "serving throughput/latency, surrogate train/score/recall)")
     args = ap.parse_args(argv)
-    if args.dse:
+    if args.surrogate:
+        fns = (lambda: surrogate_rows(quick=args.quick,
+                                      cache_path=args.surrogate_cache),)
+    elif args.dse:
         fns = (lambda: dse_study(quick=args.quick,
                                  cache_path=args.dse_cache,
                                  budget_kb=args.dse_budget_kb),)

@@ -15,7 +15,8 @@ python -m pytest -x -q -p no:randomly
 echo "== docs gate: doctests =="
 python -m pytest --doctest-modules -q -p no:randomly \
   src/repro/core/memory.py src/repro/core/suite.py src/repro/core/dse.py \
-  src/repro/core/codegen.py src/repro/serve/sim_service.py
+  src/repro/core/codegen.py src/repro/serve/sim_service.py \
+  src/repro/core/surrogate.py src/repro/core/search.py
 
 echo "== docs gate: README snippets =="
 # extract EVERY ```python fenced block from the README and execute them in
@@ -57,6 +58,13 @@ echo "== dse-smoke gate =="
 dse_tmp="$(mktemp -d)"
 trap 'rm -f "$snippet"; rm -rf "$dse_tmp"' EXIT
 python -m repro.core.dse --space smoke --cache "$dse_tmp/cache.jsonl" --smoke
+
+echo "== surrogate-smoke gate =="
+# learned-cost-model search: train the MLP surrogate on a 64-point explore,
+# search the 18k-point SPACE_10K; every frontier point must be backed by an
+# exact cached engine result (runtime re-derives bitwise) and repeat runs —
+# exhaustive-scoring AND evolutionary modes — must be bitwise-identical
+python -m repro.core.search --smoke
 
 echo "== serve-smoke gate =="
 # simulation service: short Poisson request stream through a fresh on-disk

@@ -96,6 +96,55 @@ SPACE_SMOKE = DesignSpace.of(
     dram_bw_bytes_cycle=(4.0, 8.0),
 )
 
+# ---------------------------------------------------------------------------
+# Surrogate-search spaces (repro.core.search): beyond exhaustive reach.
+#
+# SPACE_HUGE is the million-point design space the learned surrogate makes
+# tractable — every SPACE_FULL axis widened (lanes to 16, renaming to 96,
+# three MSHR files, four LLCs, three DRAM generations) plus the knobs the
+# exact sweeps never had the budget to open (ROB depth, VRF read ports,
+# interconnect topology, memory ports, L1 capacity):
+# 6*5*4*2*3*2*2*2*2*3*4*3*3 = 1,244,160 configurations.  Every SPACE_FULL
+# point is a SPACE_HUGE point (each axis is a superset and every unlisted
+# knob keeps its default), so the exhaustive SPACE_FULL Pareto frontier is a
+# recall yardstick for the surrogate-guided search.
+#
+# SPACE_10K (18,432) is the CI-scale search space: big enough that the
+# search layer's pruning matters, small enough to smoke-test in seconds.
+# ---------------------------------------------------------------------------
+
+SPACE_HUGE = DesignSpace.of(
+    "huge",
+    mvl=MVLS,                             # 6
+    lanes=(1, 2, 4, 8, 16),               # 5  datapath width, past Table 10
+    phys_regs=(40, 48, 64, 96),           # 4  renaming depth (96 = ring cap)
+    rob_entries=(32, 64),                 # 2  reorder window
+    queue_entries=(8, 16, 32),            # 3  issue-queue size
+    ooo_issue=(False, True),              # 2  issue policy
+    vrf_read_ports=(1, 2),                # 2  VRF port count (§3.2.4 startup)
+    interconnect=("ring", "crossbar"),    # 2  slide/reduce topology (§3.2.6)
+    mem_ports=(1, 2),                     # 2  L2 ports
+    l1_kb=(16, 32, 64),                   # 3  private cache
+    l2_kb=(256, 512, 1024, 2048),         # 4  LLC capacity
+    mshrs=(1, 4, 16),                     # 3  gather-miss concurrency
+    dram_bw_bytes_cycle=(4.0, 8.0, 16.0),  # 3  memory-system generation
+)
+
+SPACE_10K = DesignSpace.of(
+    "10k",
+    mvl=MVLS,                        # 6
+    lanes=LANES,                     # 4
+    phys_regs=(40, 64),              # 2
+    rob_entries=(32, 64),            # 2
+    queue_entries=(8, 16),           # 2
+    ooo_issue=(False, True),         # 2
+    vrf_read_ports=(1, 2),           # 2
+    l1_kb=(16, 32, 64),              # 3
+    l2_kb=(256, 1024),               # 2
+    mshrs=(1, 16),                   # 2
+    dram_bw_bytes_cycle=(4.0, 8.0),  # 2  -> 18,432 points
+)
+
 # Default app subsets per space: smoke pairs a compute-bound app with the
 # gather-heavy one (exercises both memory paths), quick adds a frontend-only
 # ML workload, full is the whole 10-app suite.

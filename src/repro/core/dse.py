@@ -110,9 +110,26 @@ class DesignSpace:
 
     def sample(self, n: int, seed: int = 0) -> list:
         """``n`` distinct configs, deterministic in ``seed`` (sorted flat
-        indices, so the sample preserves enumeration order)."""
+        indices, so the sample preserves enumeration order).
+
+        ``n`` must not exceed ``size()``: the space cannot yield more
+        distinct configs than it has, and silently returning fewer (or
+        duplicating) would let a caller believe it explored ``n`` points.
+        ``n == size()`` returns the full enumeration.
+
+        >>> sp = DesignSpace.of("demo", mvl=(8, 64), lanes=(1, 4))
+        >>> sp.sample(4) == sp.configs()
+        True
+        >>> sp.sample(5)
+        Traceback (most recent call last):
+            ...
+        ValueError: sample(5) from 'demo' with only 4 configs
+        """
         total = self.size()
-        if n >= total:
+        if n > total:
+            raise ValueError(
+                f"sample({n}) from {self.name!r} with only {total} configs")
+        if n == total:
             return self.configs()
         idx = np.sort(np.random.RandomState(seed).choice(
             total, size=n, replace=False))
@@ -265,6 +282,58 @@ class ResultCache:
     def hit_rate(self) -> float:
         n = self.hits + self.misses
         return self.hits / n if n else 0.0
+
+    def records(self):
+        """Iterate the cached ``(key, steady_ns)`` pairs, insertion order
+        (disk order first, then in-run puts).  A pure read: unlike
+        :meth:`get` it does not count toward hit/miss statistics — it is
+        the offline-consumer view of the cache (training-data mining,
+        audits), not the dispatch-dedup path."""
+        yield from self._mem.items()
+
+    def export_training_rows(self, apps, configs, warmup: int = 8,
+                             measure: int = 24) -> list:
+        """Join cached steady-state times back to explicit (app, config)
+        cells — WITHOUT re-simulating anything.
+
+        The JSONL values are keyed by opaque fingerprints, so an offline
+        consumer (the surrogate cost model, ``repro.core.surrogate``) cannot
+        reconstruct features from the cache alone; but given a candidate
+        universe of apps x configs it can recompute every cell's key
+        (``cell_key`` builds the body and fingerprints — no engine dispatch)
+        and look the value up.  Cells absent from the cache are skipped.
+
+        Returns one dict per labeled cell::
+
+            {"app", "label", "cfg", "key", "steady_ns",   # the cached value
+             "runtime_ns", "speedup", "area_kb"}          # derived, exact
+
+        The derived quantities use the same arithmetic as :func:`explore`
+        (``suite.vector_runtime_from_per_chunk``), so a row's ``runtime_ns``
+        is bitwise-equal to the ``DseRecord`` the exploration produced.
+        """
+        from repro.core import suite
+        cfgs = (configs.configs() if isinstance(configs, DesignSpace)
+                else list(configs))
+        model_fp = eng.model_fingerprint()
+        scalar = {a: suite.scalar_runtime_ns(a) for a in apps}
+        rows = []
+        for app in apps:
+            for cfg in cfgs:
+                body, key = cell_key(app, cfg, warmup, measure,
+                                     model_fp=model_fp)
+                v = self._mem.get(key)   # pure read: no hit/miss accounting
+                if v is None:
+                    continue
+                runtime = suite.vector_runtime_from_per_chunk(app, cfg, body,
+                                                              v)
+                rows.append({
+                    "app": app, "label": cfg.label(), "cfg": cfg, "key": key,
+                    "steady_ns": v, "runtime_ns": runtime,
+                    "speedup": scalar[app] / runtime,
+                    "area_kb": area_proxy_kb(cfg),
+                })
+        return rows
 
 
 # --------------------------------------------------------------------------

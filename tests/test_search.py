@@ -1,0 +1,155 @@
+"""Surrogate-guided search tests: survivor selection, index algebra, the
+exact-resim guarantee, determinism, and frontier recall on a space the test
+can afford to exhaust.
+"""
+import numpy as np
+import pytest
+
+from repro.core import dse, search, surrogate
+from repro.configs import vector_engine as vcfg
+
+APPS = ("blackscholes", "canneal")
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """One smoke-space explore + fit shared by the end-to-end tests; the
+    cache retains every exact cell so searches re-hit it."""
+    cache = dse.ResultCache()
+    truth = dse.explore(vcfg.SPACE_SMOKE, APPS, cache=cache)
+    rows = cache.export_training_rows(APPS, vcfg.SPACE_SMOKE)
+    model = surrogate.fit(rows, steps=400, seed=0)
+    return cache, truth, model
+
+
+# ------------------------------------------------------- survivor selection
+
+def test_survivors_keep_near_frontier_band():
+    idx = np.array([7, 3, 9, 5])
+    pred = np.array([10.0, 11.0, 30.0, 5.0])
+    area = np.array([1.0, 1.0, 2.0, 3.0])
+    # band: the two area-1 points (10 within 15% of 10) and the pred-5 point
+    assert search._survivors(idx, pred, area, eps=0.15, cap=10).tolist() \
+        == [3, 5, 7]
+
+
+def test_survivors_stratify_across_area_not_collapse():
+    """With a tight cap the kept survivors must span the area range, not
+    cluster at the lowest flat indices (the coverage property recall depends
+    on)."""
+    n = 10_000
+    idx = np.arange(n)
+    area = np.linspace(1.0, 100.0, n)
+    pred = 1000.0 / (area + 1.0)             # smooth predicted frontier
+    kept = search._survivors(idx, pred, area, eps=0.5, cap=64)
+    assert len(kept) <= 64
+    kept_areas = area[kept]
+    assert kept_areas.min() < 10.0 and kept_areas.max() > 90.0
+    # deterministic
+    again = search._survivors(idx, pred, area, eps=0.5, cap=64)
+    assert np.array_equal(kept, again)
+
+
+def test_survivors_depth_keeps_backups_per_stratum():
+    n = 1000
+    idx = np.arange(n)
+    area = np.linspace(1.0, 10.0, n)
+    pred = np.full(n, 100.0)                 # everything ties the frontier
+    got = search._survivors(idx, pred, area, eps=0.1, cap=30, depth=3)
+    assert len(got) == 30                    # 10 strata x 3 backups
+
+
+# ------------------------------------------------------------ index algebra
+
+def test_decode_encode_roundtrip_matches_config_at():
+    sp = vcfg.SPACE_10K
+    radices = [len(c) for _, c in sp.axes]
+    idx = np.array([0, 1, 17, 4095, sp.size() - 1])
+    digits = search._decode(idx, radices)
+    assert np.array_equal(search._encode(digits, radices), idx)
+    # digits agree with the configs config_at() builds
+    names = [n for n, _ in sp.axes]
+    choices = [c for _, c in sp.axes]
+    for k, i in enumerate(idx):
+        cfg = sp.config_at(int(i))
+        for a, name in enumerate(names):
+            assert getattr(cfg, name) == choices[a][digits[k, a]], (i, name)
+
+
+def test_neighbors_are_exact_hamming_one():
+    radices = [3, 2, 2]
+    nbrs = search._neighbors(np.array([0]), radices)
+    digits0 = search._decode(np.array([0]), radices)[0]
+    assert len(nbrs) == (3 - 1) + (2 - 1) + (2 - 1)
+    for n in nbrs:
+        d = search._decode(np.array([n]), radices)[0]
+        assert int((d != digits0).sum()) == 1
+    assert len(search._neighbors(np.empty(0, np.int64), radices)) == 0
+
+
+# ------------------------------------------------------------------ recall
+
+def test_frontier_recall_bounds():
+    from types import SimpleNamespace as R
+    truth = [R(runtime_ns=10.0, area_kb=5.0), R(runtime_ns=20.0, area_kb=1.0)]
+    assert search.frontier_recall([], truth) == 0.0
+    assert search.frontier_recall(truth, truth) == 1.0
+    assert search.frontier_recall(truth, []) == 1.0
+    # strictly-better points weakly dominate
+    assert search.frontier_recall(
+        [R(runtime_ns=5.0, area_kb=0.5)], truth) == 1.0
+
+
+# ------------------------------------------------------------- end to end
+
+def test_search_frontier_is_exact_and_bitwise_repeatable(trained):
+    cache, truth, model = trained
+    res1 = search.search(vcfg.SPACE_SMOKE, APPS, model, cache=cache,
+                         seed=0, max_resim_per_app=16, refine_rounds=1)
+    res2 = search.search(vcfg.SPACE_SMOKE, APPS, model, cache=cache,
+                         seed=0, max_resim_per_app=16, refine_rounds=1)
+    assert search.frontier_fingerprint(res1) \
+        == search.frontier_fingerprint(res2)
+    # every frontier point is backed by an exact cached engine result whose
+    # runtime re-derives bitwise — the never-report-a-prediction guarantee
+    assert search._verify_exact(res1, cache) == sum(
+        len(f) for f in res1.frontiers.values())
+
+
+def test_search_recovers_exhaustive_frontier_when_it_can_refine(trained):
+    """Searching the very space the exact explore exhausted: the surrogate
+    plus one refinement round must recover the exhaustive Pareto frontier
+    (recall 1.0) while nominating far fewer than 64 configs up front."""
+    cache, truth, model = trained
+    res = search.search(vcfg.SPACE_SMOKE, APPS, model, cache=cache,
+                        seed=0, max_resim_per_app=16, refine_rounds=2)
+    tf = truth.frontiers()
+    for app in APPS:
+        assert search.frontier_recall(res.frontiers[app], tf[app]) == 1.0, app
+        assert res.stats["resim"][app]["resim"] <= vcfg.SPACE_SMOKE.size()
+    assert res.stats["mode"] == "exhaustive-score"
+
+
+def test_search_evolutionary_path_is_deterministic(trained):
+    cache, _, model = trained
+    kw = dict(cache=cache, seed=3, max_resim_per_app=12, refine_rounds=1,
+              exhaustive_limit=0, rounds=2, pop=512)
+    r1 = search.search(vcfg.SPACE_SMOKE, APPS, model, **kw)
+    r2 = search.search(vcfg.SPACE_SMOKE, APPS, model, **kw)
+    assert r1.stats["mode"] == "evolutionary"
+    assert search.frontier_fingerprint(r1) == search.frontier_fingerprint(r2)
+    search._verify_exact(r1, cache)
+
+
+def test_search_records_only_contain_exact_dse_records(trained):
+    cache, _, model = trained
+    res = search.search(vcfg.SPACE_SMOKE, APPS, model, cache=cache,
+                        seed=0, max_resim_per_app=8, refine_rounds=0)
+    for app in APPS:
+        for r in res.records[app]:
+            assert isinstance(r, dse.DseRecord)
+            assert r.area_kb == dse.area_proxy_kb(r.cfg)
+        # the frontier is the Pareto set of exactly those records
+        want = dse.pareto_frontier(res.records[app])
+        assert [(w.label, w.runtime_ns) for w in want] == \
+            [(f.label, f.runtime_ns) for f in res.frontiers[app]]

@@ -1,0 +1,193 @@
+"""Surrogate cost-model tests: features, training, batched scoring, scorecard.
+
+Kept cheap: one 64-point SPACE_SMOKE explore labels the training rows
+(module-scoped), fits run a few hundred full-batch steps (~1 s).
+"""
+import numpy as np
+import pytest
+
+from repro.core import dse, surrogate, tracegen
+from repro.core import engine as eng
+from repro.configs import vector_engine as vcfg
+
+APPS = ("blackscholes", "canneal")
+
+
+@pytest.fixture(scope="module")
+def labeled():
+    cache = dse.ResultCache()
+    dse.explore(vcfg.SPACE_SMOKE, APPS, cache=cache)
+    rows = cache.export_training_rows(APPS, vcfg.SPACE_SMOKE)
+    assert len(rows) == 128
+    return cache, rows
+
+
+@pytest.fixture(scope="module")
+def model(labeled):
+    _, rows = labeled
+    return surrogate.fit(rows, steps=400, seed=0)
+
+
+# ----------------------------------------------------------------- features
+
+def test_config_features_cover_every_live_knob():
+    import dataclasses
+    assert set(surrogate.CONFIG_FEATURES) == {
+        f.name for f in dataclasses.fields(eng.VectorEngineConfig)}
+    cfg = eng.VectorEngineConfig(mvl=64, lanes=4, ooo_issue=True,
+                                 interconnect="crossbar")
+    feats = surrogate.config_features(cfg)
+    assert feats.shape == (len(surrogate.CONFIG_FEATURES),)
+    f = dict(zip(surrogate.CONFIG_FEATURES, feats))
+    assert f["mvl"] == 64.0 and f["lanes"] == 4.0
+    assert f["ooo_issue"] == 1.0            # bool -> 0/1
+    assert f["interconnect"] == 0.0         # crossbar=0, ring=1
+    assert surrogate.config_features(
+        eng.VectorEngineConfig())[list(surrogate.CONFIG_FEATURES)
+                                  .index("interconnect")] == 1.0
+
+
+def test_trace_features_key_on_app_and_mvl_only():
+    a = surrogate.trace_features("blackscholes", 64)
+    b = surrogate.trace_features("blackscholes", 64)
+    assert a is b                            # memoized
+    assert a.shape == (len(surrogate.TRACE_FEATURES),)
+    assert np.isfinite(a).all()
+    # a different MVL and a different app both change the features
+    assert not np.array_equal(a, surrogate.trace_features("blackscholes", 8))
+    assert not np.array_equal(a, surrogate.trace_features("canneal", 64))
+
+
+def test_trace_features_match_characterize_closed_forms():
+    from repro.core import characterize
+    feats = dict(zip(surrogate.TRACE_FEATURES,
+                     surrogate.trace_features("swaptions", 64)))
+    c = characterize.characterize("swaptions", 64)
+    assert feats["pct_vectorization"] == pytest.approx(c.pct_vectorization)
+    assert feats["avg_vl_counts"] == pytest.approx(c.avg_vl)
+    # canneal caps at max_vl=22: the effective-MVL feature reflects the clamp
+    f2 = dict(zip(surrogate.TRACE_FEATURES,
+                  surrogate.trace_features("canneal", 256)))
+    assert f2["eff_mvl"] == 22.0
+
+
+def test_row_features_concatenate_config_and_trace():
+    cfg = eng.VectorEngineConfig(mvl=64, lanes=4)
+    row = surrogate.row_features("blackscholes", cfg)
+    assert row.shape == (surrogate.N_FEATURES,)
+    n = len(surrogate.CONFIG_FEATURES)
+    assert np.array_equal(row[:n], surrogate.config_features(cfg))
+    assert np.array_equal(row[n:],
+                          surrogate.trace_features("blackscholes", 64))
+
+
+# ----------------------------------------------------------------- training
+
+def test_fit_is_deterministic_in_seed(labeled):
+    _, rows = labeled
+    m1 = surrogate.fit(rows, steps=150, seed=0)
+    m2 = surrogate.fit(rows, steps=150, seed=0)
+    m3 = surrogate.fit(rows, steps=150, seed=1)
+    for k in m1.params:
+        assert np.array_equal(np.asarray(m1.params[k]),
+                              np.asarray(m2.params[k])), k
+    assert any(not np.array_equal(np.asarray(m1.params[k]),
+                                  np.asarray(m3.params[k]))
+               for k in m1.params)
+
+
+def test_fit_rejects_empty_rows():
+    with pytest.raises(ValueError, match="at least one"):
+        surrogate.fit([])
+
+
+def test_fit_learns_the_training_set(model, labeled):
+    _, rows = labeled
+    pred = model.predict_runtime_ns(rows)
+    true = np.array([r["runtime_ns"] for r in rows])
+    rel = np.abs(pred - true) / true
+    assert np.median(rel) < 0.05
+    assert model.meta["n_rows"] == 128
+    assert model.apps == ("blackscholes", "canneal")
+
+
+def test_dead_features_stay_bounded_out_of_distribution(model):
+    """Knobs the training sweep never varied (phys_regs, l1_kb, ... in
+    SPACE_SMOKE) must not blow up predictions when a bigger search space
+    sweeps them — the std-floor trap."""
+    assert np.all(model.feat_std >= 1e-6)
+    cfgs = [eng.VectorEngineConfig(mvl=8, lanes=16, phys_regs=96,
+                                   l1_kb=16, interconnect="crossbar",
+                                   rob_entries=32, vrf_read_ports=2),
+            eng.VectorEngineConfig(mvl=256, lanes=1, l2_kb=2048)]
+    pred = model.predict_runtime_ns(
+        [{"app": "blackscholes", "cfg": c} for c in cfgs])
+    assert np.isfinite(pred).all() and (pred > 0).all()
+
+
+# ------------------------------------------------------------ batched scorer
+
+def test_space_scorer_matches_row_path_and_exact_area(model):
+    scorer = surrogate.SpaceScorer(model, vcfg.SPACE_10K, "blackscholes")
+    idx = np.array([0, 1, 255, 4096, 18431])
+    pred, area = scorer.score(idx)
+    cfgs = [vcfg.SPACE_10K.config_at(int(i)) for i in idx]
+    want = model.predict_runtime_ns(
+        [{"app": "blackscholes", "cfg": c} for c in cfgs])
+    np.testing.assert_allclose(pred, want, rtol=1e-6)
+    # the area channel is dse.area_proxy_kb exactly (it gates real resims)
+    np.testing.assert_allclose(
+        area, [dse.area_proxy_kb(c) for c in cfgs], rtol=1e-6)
+
+
+def test_space_scorer_handles_spaces_without_mvl_axis(model):
+    sp = dse.DesignSpace.of("nomvl", lanes=(2, 8), l2_kb=(256, 1024))
+    scorer = surrogate.SpaceScorer(model, sp, "canneal")
+    pred, area = scorer.score(np.arange(sp.size()))
+    assert pred.shape == (4,) and np.isfinite(pred).all()
+    np.testing.assert_allclose(
+        area, [dse.area_proxy_kb(c) for c in sp.configs()], rtol=1e-6)
+
+
+def test_space_scorer_is_deterministic_across_batches(model):
+    scorer = surrogate.SpaceScorer(model, vcfg.SPACE_10K, "canneal")
+    full, _ = scorer.score(np.arange(2048))
+    # a partial (padded) batch scores identically to the same points inside
+    # a larger call
+    part, _ = scorer.score(np.arange(100, 200))
+    assert np.array_equal(part, full[100:200])
+
+
+# ---------------------------------------------------------------- scorecard
+
+def test_ranks_and_spearman_tie_handling():
+    assert surrogate._ranks([10.0, 20.0, 20.0, 30.0]).tolist() == \
+        [0.0, 1.5, 1.5, 3.0]
+    assert surrogate.spearman([1, 2, 3], [1, 2, 3]) == 1.0
+    assert surrogate.spearman([1, 2, 3], [3, 2, 1]) == -1.0
+    assert surrogate.spearman([1.0, 1.0], [2.0, 2.0]) == 0.0  # degenerate
+
+
+def test_scorecard_shape_and_holdout(model, labeled):
+    _, rows = labeled
+    card = surrogate.scorecard(model, rows, holdout_app="canneal")
+    assert card["n_rows"] == 128
+    assert 0.0 <= card["rel_err_p50"] <= card["rel_err_p90"] \
+        <= card["rel_err_p99"] <= card["rel_err_max"]
+    assert set(card["per_app"]) == {"blackscholes", "canneal"}
+    assert card["holdout"]["app"] == "canneal"
+    assert card["holdout"]["trained_on"] is True
+    assert -1.0 <= card["spearman_all"] <= 1.0
+
+
+def test_scorecard_flags_truly_heldout_app(labeled):
+    """Train without canneal: the scorecard must mark it as not trained on —
+    the honest-generalization bookkeeping the benchmark rows rely on."""
+    _, rows = labeled
+    bs_rows = [r for r in rows if r["app"] == "blackscholes"]
+    m = surrogate.fit(bs_rows, steps=150, seed=0)
+    card = surrogate.scorecard(m, rows, holdout_app="canneal")
+    assert m.apps == ("blackscholes",)
+    assert card["per_app"]["canneal"]["trained_on"] is False
+    assert card["per_app"]["blackscholes"]["trained_on"] is True
+    assert np.isfinite(card["holdout"]["mean_rel_err"])

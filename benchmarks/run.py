@@ -26,7 +26,7 @@ def _t(fn, *args, reps=3):
 
 
 # machine-readable results collected while the driver runs; main() writes
-# them to --bench-json (BENCH_pr8.json by default)
+# them to --bench-json (BENCH_pr9.json by default)
 _BENCH: dict = {}
 
 
@@ -509,6 +509,60 @@ def roofline_table():
     return out
 
 
+# Pre-PR-9 scalar baselines (ns): the retired SCALAR_BASELINE_MULT model's
+# per-app runtimes, frozen so `--scalar` can report old-vs-new drift across
+# the event-model replacement.
+_OLD_SCALAR_NS = {
+    "blackscholes": 7.857e9, "canneal": 6.160e9, "jacobi-2d": 7.835e9,
+    "particlefilter": 2.172e9, "pathfinder": 7.115e9,
+    "streamcluster": 3.999e10, "swaptions": 2.669e10,
+    "flash_attention": 3.042e10, "decode_attention": 1.785e9,
+    "ssd_scan": 2.475e8,
+}
+
+
+def scalar_rows():
+    """Scalar-baseline rows: per-app old-vs-new runtime, the 11-anchor
+    rel-err table, and the scorecard wall-clock."""
+    from repro.core import engine as eng
+    from repro.core import scalar_pipeline as sp
+    from repro.core import suite, tracegen
+    from repro.core.anchors import ANCHORS
+
+    rows = []
+    bench = _BENCH.setdefault("scalar", {})
+    for app in sorted(_OLD_SCALAR_NS):
+        t0 = time.perf_counter()
+        new = sp.scalar_runtime_ns(app)
+        us = (time.perf_counter() - t0) * 1e6
+        old = _OLD_SCALAR_NS[app]
+        prof = tracegen.scalar_profile_for(app)
+        n = tracegen.app_for(app).counts(8).scalar_code_total \
+            * prof.roi_instr_fraction
+        cpi = sp.scalar_cycles(app) / n
+        rows.append((f"scalar_baseline_{app}", us,
+                     f"old={old:.4g}ns|new={new:.4g}ns|"
+                     f"ratio={new / old:.4f}|cpi={cpi:.3f}"))
+        bench[app] = {"old_ns": old, "new_ns": new, "cpi": cpi}
+
+    t0 = time.perf_counter()
+    anchor_rows = []
+    for app, mvl, lanes, target, kind in ANCHORS:
+        cfg = eng.VectorEngineConfig(mvl=mvl, lanes=lanes)
+        got = suite.speedup(app, cfg)
+        anchor_rows.append((f"scalar_anchor_{app}_mvl{mvl}_l{lanes}", 0.0,
+                            f"model={got:.3f}|paper={target:.3f}|"
+                            f"rel_err={got / target - 1.0:+.3f}|{kind}"))
+        bench.setdefault("anchors", {})[f"{app}@{mvl}x{lanes}"] = {
+            "model": got, "paper": target, "kind": kind}
+    wall = time.perf_counter() - t0
+    rows += anchor_rows
+    rows.append(("scalar_scorecard_wallclock", wall * 1e6,
+                 f"{len(anchor_rows)}_anchors"))
+    bench["scorecard_wallclock_s"] = wall
+    return rows
+
+
 def main(argv=None) -> None:
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
@@ -524,6 +578,10 @@ def main(argv=None) -> None:
                          "--dse-cache, report Pareto frontiers + cache-hit "
                          "stats (a repeat run must be >=99%% hits with an "
                          "identical frontier fingerprint)")
+    ap.add_argument("--scalar", action="store_true",
+                    help="scalar-baseline rows only: per-app old-vs-new "
+                         "runtime across the event-model replacement, the "
+                         "11-anchor rel-err table, scorecard wall-clock")
     ap.add_argument("--rvv", action="store_true",
                     help="RVV assembly frontend rows only: per-app decode "
                          "wall-clock, asm-vs-hand cross-validation "
@@ -554,11 +612,12 @@ def main(argv=None) -> None:
         help="persistent simulation-service result cache (JSONL)")
     ap.add_argument("--dse-budget-kb", type=float, default=512.0)
     ap.add_argument("--bench-json", default=os.path.join(
-        os.path.dirname(__file__), "..", "BENCH_pr8.json"),
+        os.path.dirname(__file__), "..", "BENCH_pr9.json"),
         help="machine-readable results path (sweep wall-clock, batched "
              "speedup, per-app steady-state times, crossval verdicts "
              "incl. the RVV frontend, DSE frontiers + cache stats, "
-             "serving throughput/latency, surrogate train/score/recall)")
+             "serving throughput/latency, surrogate train/score/recall, "
+             "scalar-baseline old-vs-new + anchor scorecard)")
     args = ap.parse_args(argv)
     if args.surrogate:
         fns = (lambda: surrogate_rows(quick=args.quick,
@@ -572,24 +631,36 @@ def main(argv=None) -> None:
                                   cache_path=args.serve_cache),)
     elif args.rvv:
         fns = (lambda: rvv_rows(quick=args.quick),)
+    elif args.scalar:
+        fns = (scalar_rows,)
     elif args.quick:
         fns = (table_3_to_9_characterization, figures_4_to_10_scalability,
                sweep_llc, sweep_mshr, frontend_crossval,
                lambda: rvv_rows(quick=True),
                lambda: codegen_rows(quick=True), steady_state_table,
-               lambda: sweep_wallclock(quick=True))
+               scalar_rows, lambda: sweep_wallclock(quick=True))
     else:
         fns = (table_3_to_9_characterization, figures_4_to_10_scalability,
                sweep_llc, sweep_mshr, frontend_crossval,
                lambda: rvv_rows(), lambda: codegen_rows(),
-               steady_state_table, kernel_microbench, roofline_table,
-               lambda: sweep_wallclock(quick=False))
+               steady_state_table, scalar_rows, kernel_microbench,
+               roofline_table, lambda: sweep_wallclock(quick=False))
     print("name,us_per_call,derived")
     for fn in fns:
         for name, us, derived in fn():
             print(f"{name},{us:.1f},{derived}")
+    # Merge into an existing snapshot so single-mode runs (--scalar,
+    # --surrogate, ...) layer their sections instead of clobbering the rest.
+    merged = {}
+    if os.path.exists(args.bench_json):
+        try:
+            with open(args.bench_json) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+    merged.update(_BENCH)
     with open(args.bench_json, "w") as f:
-        json.dump(_BENCH, f, indent=1, sort_keys=True)
+        json.dump(merged, f, indent=1, sort_keys=True)
         f.write("\n")
     print(f"# wrote {os.path.normpath(args.bench_json)}")
 

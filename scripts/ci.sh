@@ -16,7 +16,8 @@ echo "== docs gate: doctests =="
 python -m pytest --doctest-modules -q -p no:randomly \
   src/repro/core/memory.py src/repro/core/suite.py src/repro/core/dse.py \
   src/repro/core/codegen.py src/repro/serve/sim_service.py \
-  src/repro/core/surrogate.py src/repro/core/search.py
+  src/repro/core/surrogate.py src/repro/core/search.py \
+  src/repro/core/scalar_pipeline.py
 
 echo "== docs gate: README snippets =="
 # extract EVERY ```python fenced block from the README and execute them in
@@ -25,6 +26,12 @@ snippet="$(mktemp --suffix=.py)"
 trap 'rm -f "$snippet"' EXIT
 awk '/^```python/{f=1;next} /^```/{f=0} f' README.md > "$snippet"
 python "$snippet"
+
+echo "== scalar-scorecard gate =="
+# the event-based scalar-pipeline baseline vs all 11 paper §5 anchors, plus
+# batched-vs-sequential bitwise equivalence, knob monotonicity and the
+# physical-CPI floor (no app's baseline may imply scalar CPI < 0.5)
+python -m repro.core.scalar_pipeline --check
 
 echo "== frontend cross-validation gate =="
 # derived (jaxpr-lowered) bodies vs hand-coded tracegen bodies: exact

@@ -39,7 +39,7 @@ TABLE10 = tuple(
         ooo_issue=False, vrf_read_ports=1, vrf_line_bits=512,
         interconnect="ring", mem_ports=1, cache_line_bits=512,
         lat_l1=4.0, lat_l2=12.0, l2_kb=256,
-        scalar_freq_ghz=2.0, vector_freq_ghz=1.0, scalar_ipc=2.0,
+        scalar_freq_ghz=2.0, vector_freq_ghz=1.0, issue_width=2,
     )
     for mvl in MVLS for lanes in LANES
 )

@@ -316,7 +316,6 @@ class ResultCache:
         cfgs = (configs.configs() if isinstance(configs, DesignSpace)
                 else list(configs))
         model_fp = eng.model_fingerprint()
-        scalar = {a: suite.scalar_runtime_ns(a) for a in apps}
         rows = []
         for app in apps:
             for cfg in cfgs:
@@ -330,7 +329,7 @@ class ResultCache:
                 rows.append({
                     "app": app, "label": cfg.label(), "cfg": cfg, "key": key,
                     "steady_ns": v, "runtime_ns": runtime,
-                    "speedup": scalar[app] / runtime,
+                    "speedup": suite.scalar_runtime_ns(app, cfg) / runtime,
                     "area_kb": area_proxy_kb(cfg),
                 })
         return rows
@@ -392,7 +391,7 @@ class DseRecord:
     cfg: eng.VectorEngineConfig
     steady_ns: float      # steady-state time of one loop body
     runtime_ns: float     # modeled whole-app vector runtime
-    speedup: float        # vs. the app's calibrated scalar baseline
+    speedup: float        # vs. the scalar-pipeline model on cfg's scalar core
     area_kb: float        # area_proxy_kb(cfg)
 
 
@@ -452,7 +451,6 @@ def explore(space, apps=None, cache: ResultCache | None = None,
             cache.put(key, t)
         cache.flush()
 
-    scalar = {a: suite.scalar_runtime_ns(a) for a in apps}
     records = []
     for app, cfg, body, key in cells:
         per_chunk = cache._mem[key]
@@ -460,7 +458,8 @@ def explore(space, apps=None, cache: ResultCache | None = None,
                                                       per_chunk)
         records.append(DseRecord(
             app=app, label=cfg.label(), cfg=cfg, steady_ns=per_chunk,
-            runtime_ns=runtime, speedup=scalar[app] / runtime,
+            runtime_ns=runtime,
+            speedup=suite.scalar_runtime_ns(app, cfg) / runtime,
             area_kb=area_proxy_kb(cfg)))
     lookups = (cache.hits - h0) + (cache.misses - m0)
     stats = {

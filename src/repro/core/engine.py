@@ -69,7 +69,14 @@ class VectorEngineConfig:
     dram_bw_bytes_cycle: float = memory.DRAM_BW_BYTES_PER_CYCLE
     scalar_freq_ghz: float = 2.0
     vector_freq_ghz: float = 1.0
-    scalar_ipc: float = 2.0
+    # scalar-core pipeline knobs (§3.1, repro.core.scalar_pipeline): the
+    # issue width of the in-order scalar core, its branch mispredict penalty
+    # (scalar-core cycles) and macro-op fusion.  They drive the event-based
+    # scalar-baseline model AND the residual scalar blocks inside vectorized
+    # code, so they are live batch axes like every other knob here.
+    issue_width: int = 2
+    branch_miss_penalty: float = 6.0
+    fusion: bool = False
     dispatch_latency: float = 5.0  # scalar commit -> vector engine dispatch
 
     def __post_init__(self):
@@ -107,6 +114,8 @@ class VectorEngineConfig:
                 continue
             if f.name == "ooo_issue":
                 s += "_ooo"
+            elif f.name == "fusion":
+                s += "_fusion"
             elif f.name == "interconnect":
                 s += f"_{v}"
             else:
@@ -124,6 +133,17 @@ class VectorEngineConfig:
 SCALAR_CYCLES = np.array([1.1, 3.0, 20.0, 24.0], np.float32)   # per FU class
 VEC_PIPE_DEPTH = np.array([2.0, 4.0, 8.0, 8.0], np.float32)
 VEC_ELEM_CYCLES = np.array([1.0, 1.0, 2.0, 2.0], np.float32)
+
+# Residual scalar blocks inside vectorized code run on the same scalar core
+# the baseline does, so the scalar-pipeline knobs perturb them too.
+# SCALAR_CYCLES are effective per-class costs at the DEFAULT core (6-cycle
+# mispredict penalty, no fusion); the knobs contribute a *delta* around that
+# default — exactly zero at the Table-10 defaults, so default-config vector
+# timings are bitwise-unchanged by the knobs' existence.
+SC_BLOCK_BRANCH_FRAC = 0.12    # branches per residual scalar instruction
+SC_BLOCK_BMISS_RATE = 0.08     # mispredict rate of those branches
+DEFAULT_BRANCH_MISS_PENALTY = 6.0
+FUSION_SIMPLE_SAVE = 0.15      # simple-class cycles removed by macro-op fusion
 
 
 def _ring_read(ring, count, capacity):
@@ -147,7 +167,8 @@ def _make_step(params):
     """
     (lanes, phys_extra, rob_entries, q_entries, read_ports, line_elems,
      mem_ports, lat_l1, lat_l2, lat_dram, scalar_scale, dispatch_lat,
-     ooo_f, ring_f, l1_kb, l2_kb, mshrs_f, dram_line_cyc) = params
+     ooo_f, ring_f, l1_kb, l2_kb, mshrs_f, dram_line_cyc,
+     bmiss_extra, fuse_save) = params
     sc_cost = jnp.asarray(SCALAR_CYCLES)
     pipe_depth = jnp.asarray(VEC_PIPE_DEPTH)
     elem_cost = jnp.asarray(VEC_ELEM_CYCLES)
@@ -164,8 +185,14 @@ def _make_step(params):
         is_scalar = (kind == isa.SCALAR_BLOCK) | (kind == isa.NOP)
 
         # ---- scalar block ---------------------------------------------------
+        # per-class cost with the scalar-pipeline knob deltas: macro-op
+        # fusion trims simple-class cycles, a non-default mispredict penalty
+        # adds/removes branch-miss cycles per instruction.  Both deltas are
+        # exactly 0.0 at the Table-10 defaults (bitwise-neutral).
         t_wait = jnp.where(dep, jnp.maximum(t_scalar, scalar_res), t_scalar)
-        sc_time = s_count.astype(jnp.float32) * sc_cost[fu] * scalar_scale
+        s_cf = s_count.astype(jnp.float32)
+        eff_cost = sc_cost[fu] * (1.0 - fuse_save * (fu == 0))
+        sc_time = s_cf * eff_cost * scalar_scale + s_cf * bmiss_extra
         t_scalar_s = t_wait + sc_time
 
         # ---- vector instruction --------------------------------------------
@@ -358,7 +385,14 @@ def _trace_xs(trace: isa.Trace) -> tuple:
 def _cfg_params_np(cfg: VectorEngineConfig) -> tuple:
     """Per-config parameter vector (np scalars: stackable for the batch axis)."""
     freq_ratio = cfg.vector_freq_ghz / cfg.scalar_freq_ghz
-    scalar_scale = freq_ratio / cfg.scalar_ipc
+    scalar_scale = freq_ratio / cfg.issue_width
+    # knob deltas around the default core (zero at defaults; see the
+    # SC_BLOCK_* constants): extra vector-cycles per residual scalar instr
+    # from a non-default mispredict penalty, and the fused simple-class save
+    bmiss_extra = (SC_BLOCK_BRANCH_FRAC * SC_BLOCK_BMISS_RATE
+                   * (cfg.branch_miss_penalty - DEFAULT_BRANCH_MISS_PENALTY)
+                   * freq_ratio)
+    fuse_save = FUSION_SIMPLE_SAVE if cfg.fusion else 0.0
     return (
         np.float32(cfg.lanes), np.int32(cfg.phys_regs - 32),
         np.int32(cfg.rob_entries), np.int32(cfg.queue_entries),
@@ -371,13 +405,16 @@ def _cfg_params_np(cfg: VectorEngineConfig) -> tuple:
         np.float32(cfg.l1_kb), np.float32(cfg.l2_kb), np.float32(cfg.mshrs),
         np.float32(memory.dram_line_cycles(cfg.cache_line_bits,
                                            cfg.dram_bw_bytes_cycle)),
+        np.float32(bmiss_extra), np.float32(fuse_save),
     )
 
 
 # Bump when the scan-step arithmetic changes in a way the calibration
 # constants below don't capture (new resource model, different recurrence):
 # it invalidates every persistent DSE cache entry.
-MODEL_VERSION = 1
+# v2: scalar-pipeline knobs (issue_width / branch_miss_penalty / fusion)
+# entered the parameter vector and the scalar-block cost expression.
+MODEL_VERSION = 2
 
 
 def model_fingerprint() -> str:
@@ -582,9 +619,16 @@ def steady_state_time_batch(bodies, cfgs, warmup: int = 8,
 
 
 def scalar_time(trace: isa.Trace, cfg: VectorEngineConfig) -> float:
-    """Latency-weighted scalar-core time for a pure-scalar trace (ns)."""
+    """Latency-weighted scalar-core time for a pure-scalar trace (ns), with
+    the same knob deltas the scan step applies to residual scalar blocks."""
     freq_ratio = cfg.vector_freq_ghz / cfg.scalar_freq_ghz
-    scale = freq_ratio / cfg.scalar_ipc
+    scale = freq_ratio / cfg.issue_width
+    bmiss_extra = (SC_BLOCK_BRANCH_FRAC * SC_BLOCK_BMISS_RATE
+                   * (cfg.branch_miss_penalty - DEFAULT_BRANCH_MISS_PENALTY)
+                   * freq_ratio)
+    fuse_save = FUSION_SIMPLE_SAVE if cfg.fusion else 0.0
     mask = trace.kind == isa.SCALAR_BLOCK
-    return float(np.sum(
-        trace.scalar_count[mask] * SCALAR_CYCLES[trace.fu[mask]] * scale))
+    fu = trace.fu[mask]
+    eff = SCALAR_CYCLES[fu] * (1.0 - fuse_save * (fu == 0))
+    return float(np.sum(trace.scalar_count[mask] * eff * scale
+                        + trace.scalar_count[mask] * bmiss_extra))

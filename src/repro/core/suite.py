@@ -2,8 +2,10 @@
 
 ``speedup(app, cfg)`` reproduces the paper's Figures 4-10 quantity: scalar
 runtime / vectorized runtime on a given vector-engine configuration.  The
-scalar side is a latency-class-weighted instruction model; the vector side is
-``chunks x steady-state(loop body)`` from the cycle-level engine.
+scalar side is the event-based dual-issue in-order pipeline model
+(``repro.core.scalar_pipeline``, §3.1) driven by the config's scalar-core
+knobs; the vector side is ``chunks x steady-state(loop body)`` from the
+cycle-level engine.
 
 A compute-bound app beats the scalar core and an LLC upgrade helps the
 memory-stressed ones (docs/calibration.md has the full fidelity table):
@@ -19,38 +21,10 @@ True
 """
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core import engine as eng
 from repro.core import tracegen
 
-# Per-app scalar-baseline calibration (benchmarks/calibrate.py; provenance in
-# docs/calibration.md): the paper measures each app's scalar runtime in gem5
-# but publishes only instruction counts, so the absolute scalar time per
-# instruction is fitted to the §5 speedup anchors.  Values ~2.9-4.3
-# correspond to effective scalar CPI 2.2-3.6 (realistic for a dual-issue
-# in-order core on FP/stencil code).
-# particlefilter's 0.104 is NOT physical — it absorbs a suspected ROI
-# accounting difference between Table 6 (instruction counts) and Figure 7
-# (runtimes); with it the model reproduces the paper's central PF claim
-# (no configuration beats the scalar core, §5.4).  docs/calibration.md
-# documents the caveat in full.
-SCALAR_BASELINE_MULT = {
-    "blackscholes": 3.728,
-    "canneal": 4.275,
-    "jacobi-2d": 4.097,
-    "particlefilter": 0.104,
-    "pathfinder": 4.164,
-    "streamcluster": 2.905,
-    "swaptions": 1.100,
-    # Frontend-only ML workloads: no paper anchors, so the scalar baseline
-    # is modeled, not fitted — chosen so the best vector config lands in a
-    # plausible band (decode's large value reflects a scalar core that is
-    # itself DRAM-bound streaming the same multi-MB KV cache).
-    "flash_attention": 1.6,
-    "decode_attention": 6.0,
-    "ssd_scan": 1.0,
-}
+from repro.core import scalar_pipeline as _sp
 
 
 def effective_mvl(app_name: str, cfg: eng.VectorEngineConfig) -> int:
@@ -61,24 +35,15 @@ def effective_mvl(app_name: str, cfg: eng.VectorEngineConfig) -> int:
     return min(cfg.mvl, tracegen.app_for(app_name).max_vl)
 
 
-def scalar_runtime_ns(app_name: str) -> float:
-    """Modeled scalar-version runtime (ns).
-
-    work elements get the app's FU-class mix; the remaining instructions
-    (control/addressing) are simple-class.  Trace-source variants
+def scalar_runtime_ns(app_name: str,
+                      cfg: eng.VectorEngineConfig | None = None) -> float:
+    """Modeled scalar-version runtime (ns) from the event-based scalar
+    pipeline model (``repro.core.scalar_pipeline``): per-instruction-class
+    issue/RAW/branch/structural/memory events on the config's scalar core
+    (``None``: the default 2 GHz dual-issue core).  Trace-source variants
     (``"<app>:asm"``) share the base app's scalar baseline — the scalar
-    version of the program is the same either way.
-    """
-    app = tracegen.app_for(app_name)
-    counts = app.counts(8)
-    work = counts.vector_ops          # element ops at MVL=8 (min overhead)
-    overhead = max(counts.scalar_code_total - work, 0.0)
-    scale = 0.25  # (1GHz/2GHz)/IPC2 -> ns per "cycle-unit"
-    classes = ("simple", "mul", "div", "trans")
-    t = overhead * eng.SCALAR_CYCLES[0] * scale
-    for i, c in enumerate(classes):
-        t += work * app.mix.get(c, 0.0) * eng.SCALAR_CYCLES[i] * scale
-    return float(t) * SCALAR_BASELINE_MULT.get(app.name, 1.0)
+    version of the program is the same either way."""
+    return _sp.scalar_runtime_ns(app_name, cfg)
 
 
 def vector_runtime_from_per_chunk(app_name: str, cfg: eng.VectorEngineConfig,
@@ -92,13 +57,22 @@ def vector_runtime_from_per_chunk(app_name: str, cfg: eng.VectorEngineConfig,
     answers agree bitwise.
     """
     app = tracegen.app_for(app_name)
-    chunks = tracegen.chunks_for(app_name, effective_mvl(app_name, cfg), cfg)
-    counts = app.counts(cfg.mvl)
+    mvl = effective_mvl(app_name, cfg)
+    chunks = tracegen.chunks_for(app_name, mvl, cfg)
+    # counts at the *effective* MVL — body_for/chunks_for clamp to the app's
+    # max VL, so the residual derivation must too (cfg.mvl here made the
+    # residual inconsistent whenever cfg.mvl > app.max_vl)
+    counts = app.counts(mvl)
     # residual scalar work not amortized per chunk (s0-like constant part)
     per_chunk_scalar = sum(
         r for r in body.scalar_count)  # instrs already inside the body
     residual = max(counts.scalar_instrs - per_chunk_scalar * chunks, 0.0)
-    return float(chunks * per_chunk + residual * eng.SCALAR_CYCLES[0] * 0.25)
+    # ns per residual instruction on the config's scalar core:
+    # cycles / scalar clock / issue width (0.25 on the default 2 GHz
+    # dual-issue core)
+    res_scale = 1.0 / (cfg.scalar_freq_ghz * cfg.issue_width)
+    return float(chunks * per_chunk
+                 + residual * eng.SCALAR_CYCLES[0] * res_scale)
 
 
 # back-compat alias (pre-PR-6 name)
@@ -112,17 +86,19 @@ def vector_runtime_ns(app_name: str, cfg: eng.VectorEngineConfig) -> float:
 
 
 def speedup(app_name: str, cfg: eng.VectorEngineConfig) -> float:
-    return scalar_runtime_ns(app_name) / vector_runtime_ns(app_name, cfg)
+    return scalar_runtime_ns(app_name, cfg) / vector_runtime_ns(app_name, cfg)
 
 
 def speedup_batch(pairs: list[tuple[str, eng.VectorEngineConfig]]) -> list[float]:
     """Speedups for N (app, config) pairs via the batched engine: the whole
     list is two ``simulate_batch`` calls (a handful of XLA dispatches),
-    not 2N sequential simulations."""
+    not 2N sequential simulations.  The scalar side is per-pair (the
+    config's scalar-core knobs matter) but memoized per (app, scalar knobs),
+    so a sweep over vector-side knobs still computes each scalar runtime
+    once."""
     bodies = [tracegen.body_for(a, effective_mvl(a, c), c) for a, c in pairs]
     per_chunk = eng.steady_state_time_batch(bodies, [c for _, c in pairs])
-    scalar = {a: scalar_runtime_ns(a) for a in {a for a, _ in pairs}}
-    return [scalar[a] / vector_runtime_from_per_chunk(a, c, b, pc)
+    return [scalar_runtime_ns(a, c) / vector_runtime_from_per_chunk(a, c, b, pc)
             for (a, c), b, pc in zip(pairs, bodies, per_chunk)]
 
 

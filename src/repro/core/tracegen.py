@@ -51,6 +51,33 @@ class Counts:
         return self.scalar_instrs + self.total_vector
 
 
+@dataclass(frozen=True)
+class ScalarProfile:
+    """Per-app scalar-code profile driving the event-based scalar-pipeline
+    baseline (``repro.core.scalar_pipeline``), replacing the retired
+    ``SCALAR_BASELINE_MULT`` magic multipliers.
+
+    ``branch_frac``/``load_frac`` are dynamic-instruction fractions of the
+    scalar-version ROI; ``raw_frac`` is the dependency density (probability
+    an instruction stalls on an in-flight producer's remaining latency);
+    ``fusible_frac`` is the fraction of simple-class instructions leading a
+    fusible pair (macro-op fusion, off by default).  ``mem_stall_cyc`` — the
+    average extra scalar-core cycles per load beyond the pipelined L1 hit —
+    is the ONE per-app fitted parameter (``benchmarks/calibrate.py``),
+    bounded to the physical range [0, 40].  ``roi_instr_fraction`` is a
+    named published-count correction: the fraction of the app's published
+    scalar-instruction total that falls inside the published timing ROI
+    (1.0 for every app except particlefilter — see docs/calibration.md).
+    """
+    branch_frac: float
+    branch_miss_rate: float
+    load_frac: float
+    raw_frac: float
+    fusible_frac: float
+    mem_stall_cyc: float
+    roi_instr_fraction: float = 1.0
+
+
 @dataclass
 class App:
     name: str
@@ -697,6 +724,70 @@ def chunks_for(app_name: str, mvl: int, cfg=None) -> float:
 from repro.core import workloads_ml as _ml  # noqa: E402  (needs App/Counts)
 
 APPS.update(_ml.make_apps(App, Counts))
+
+
+# ---------------------------------------------------------------------------
+# Scalar-pipeline profiles (repro.core.scalar_pipeline): the per-app scalar
+# -code event profile the dual-issue in-order baseline model consumes.
+# branch/load/raw/fusible fractions are hand-set from each app's code
+# character (commented); mem_stall_cyc is the one FITTED parameter per app
+# (benchmarks/calibrate.py solves it closed-form against the §5 anchors and
+# prints this table).  particlefilter additionally carries the named
+# roi_instr_fraction correction (docs/calibration.md).
+# ---------------------------------------------------------------------------
+
+SCALAR_PROFILES = {
+    # straight-line FP pricing; few, predictable branches; streams 13.8 MB
+    # of option data -> most scalar loads miss the LLC (large mem stall)
+    "blackscholes": ScalarProfile(branch_frac=0.10, branch_miss_rate=0.06,
+                                  load_frac=0.22, raw_frac=0.35,
+                                  fusible_frac=0.30, mem_stall_cyc=11.03),
+    # pointer-chasing netlist walk: branchy, mispredict-prone, indexed loads
+    # over a ~3 MB hot set that misses both caches
+    "canneal": ScalarProfile(branch_frac=0.18, branch_miss_rate=0.12,
+                             load_frac=0.28, raw_frac=0.30,
+                             fusible_frac=0.20, mem_stall_cyc=5.25),
+    # tight stencil loops: highly predictable branches, grid streams spill L1
+    "jacobi-2d": ScalarProfile(branch_frac=0.08, branch_miss_rate=0.03,
+                               load_frac=0.30, raw_frac=0.30,
+                               fusible_frac=0.30, mem_stall_cyc=7.49),
+    # Box-Muller/transcendental-heavy with a data-dependent sequential
+    # search; the ROI correction is the named published-count term (§5.4)
+    "particlefilter": ScalarProfile(branch_frac=0.14, branch_miss_rate=0.10,
+                                    load_frac=0.22, raw_frac=0.35,
+                                    fusible_frac=0.25, mem_stall_cyc=4.0,
+                                    roi_instr_fraction=0.0763),
+    # min-propagation: compare/branch dense, row arrays mostly L2-resident
+    "pathfinder": ScalarProfile(branch_frac=0.16, branch_miss_rate=0.10,
+                                load_frac=0.25, raw_frac=0.35,
+                                fusible_frac=0.30, mem_stall_cyc=5.73),
+    # dist() call chain over a spilling working set: memory-bound scalar too
+    "streamcluster": ScalarProfile(branch_frac=0.12, branch_miss_rate=0.08,
+                                   load_frac=0.28, raw_frac=0.30,
+                                   fusible_frac=0.25, mem_stall_cyc=4.31),
+    # HJM Monte-Carlo: compute-bound, small working set at scalar block sizes
+    "swaptions": ScalarProfile(branch_frac=0.10, branch_miss_rate=0.06,
+                               load_frac=0.20, raw_frac=0.30,
+                               fusible_frac=0.30, mem_stall_cyc=1.43),
+    # ML workloads (no paper anchors): profiles modeled, mem_stall set for
+    # continuity with the previously modeled baselines (docs/calibration.md)
+    "flash_attention": ScalarProfile(branch_frac=0.06, branch_miss_rate=0.04,
+                                     load_frac=0.25, raw_frac=0.30,
+                                     fusible_frac=0.30, mem_stall_cyc=1.90),
+    # scalar core is itself DRAM-bound streaming the multi-MB KV cache
+    "decode_attention": ScalarProfile(branch_frac=0.06, branch_miss_rate=0.04,
+                                      load_frac=0.28, raw_frac=0.30,
+                                      fusible_frac=0.30, mem_stall_cyc=17.87),
+    "ssd_scan": ScalarProfile(branch_frac=0.08, branch_miss_rate=0.05,
+                              load_frac=0.25, raw_frac=0.30,
+                              fusible_frac=0.30, mem_stall_cyc=0.68),
+}
+
+
+def scalar_profile_for(app_name: str) -> ScalarProfile:
+    """The scalar profile backing a (possibly variant-suffixed) app name —
+    trace-source variants share the base app's scalar code."""
+    return SCALAR_PROFILES[split_variant(app_name)[0]]
 
 
 # With the engine batched, rebuilding ~300-entry traces per config point is a

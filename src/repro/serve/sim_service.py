@@ -290,7 +290,7 @@ class SimService:
         else:
             runtime = suite.vector_runtime_from_per_chunk(
                 name, req.cfg, body, per_chunk)
-            speedup = suite.scalar_runtime_ns(name) / runtime
+            speedup = suite.scalar_runtime_ns(name, req.cfg) / runtime
         if source == "cache":
             self.n_hits += 1
         res = SimResult(

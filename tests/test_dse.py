@@ -98,6 +98,53 @@ def test_labels_unique_over_space_full():
     assert a.label() != b.label()
 
 
+def test_labels_unique_over_scalar_knob_extension():
+    """ISSUE-9 satellite: the space extended by the scalar-core knobs
+    (issue_width / branch_miss_penalty / fusion) must keep labels unique —
+    the PR-4 float-aliasing bug showed silent key collisions are real."""
+    import dataclasses
+    base = vcfg.SPACE_FULL.configs()[:64]
+    extended = list(base)
+    for cfg in base:
+        extended += [dataclasses.replace(cfg, issue_width=1),
+                     dataclasses.replace(cfg, branch_miss_penalty=12.0),
+                     dataclasses.replace(cfg, fusion=True)]
+    labels = [c.label() for c in extended]
+    assert len(set(labels)) == len(extended)
+    assert "_fusion" in eng.VectorEngineConfig(fusion=True).label()
+
+
+def test_config_fingerprint_distinguishes_scalar_knobs():
+    """The new knobs change the vector engine's scalar-block timing, so
+    they MUST enter config_fingerprint — a stale cache hit across them
+    would silently serve the wrong per-chunk time."""
+    import dataclasses
+    base = eng.VectorEngineConfig(mvl=64, lanes=4)
+    fps = {eng.config_fingerprint(base)}
+    for up in (dict(issue_width=1), dict(issue_width=4),
+               dict(branch_miss_penalty=12.0), dict(fusion=True)):
+        fps.add(eng.config_fingerprint(dataclasses.replace(base, **up)))
+    assert len(fps) == 5
+
+
+def test_cache_misses_on_new_scalar_knob():
+    """End-to-end: a cache warmed at the default scalar core must MISS (and
+    re-simulate) when a scalar knob changes, not serve the stale cell."""
+    import dataclasses
+    cache = dse.ResultCache()
+    sp1 = dse.DesignSpace.of("t_iw", mvl=(16,), lanes=(2,))
+    r1 = dse.explore(sp1, apps=("blackscholes",), cache=cache)
+    assert r1.stats["simulated"] == 1
+    cfg_f = dataclasses.replace(sp1.configs()[0], fusion=True)
+    r2 = dse.explore([cfg_f], apps=("blackscholes",), cache=cache)
+    assert r2.stats["simulated"] == 1      # miss: fusion is its own cell
+    _, k1 = dse.cell_key("blackscholes", sp1.configs()[0], 8, 24)
+    _, k2 = dse.cell_key("blackscholes", cfg_f, 8, 24)
+    assert k1 != k2
+    # the scalar side sees the knob too: same vector cell, new baseline
+    assert r2.records[0].speedup != r1.records[0].speedup
+
+
 # ----------------------------------------------------------- area/cost proxy
 
 def test_area_proxy_monotone_in_capability():

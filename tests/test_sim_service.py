@@ -37,7 +37,7 @@ def test_cold_path_is_bitwise_the_batched_engine():
         want = suite.vector_runtime_from_per_chunk(app, cfg, body,
                                                    direct[app])
         assert by_app[app].runtime_ns == want
-        assert by_app[app].speedup == suite.scalar_runtime_ns(app) / want
+        assert by_app[app].speedup == suite.scalar_runtime_ns(app, cfg) / want
 
 
 def test_hit_path_answers_without_dispatch_and_bitwise():

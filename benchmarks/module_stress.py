@@ -1,9 +1,23 @@
-"""Validate the paper's Table 2: which engine modules each app stresses.
+"""Validate the paper's Table 2 two independent ways: which engine modules
+each app stresses.
 
-From the timing simulation we extract per-module busy fractions (lanes vs VMU)
-and instruction-class shares, and check them against the paper's
-checkmark matrix (memory-unit usage, interconnection usage, scalar-core
-communication).
+**Differential** (the original derivation): static trace shares + knob
+ablation — manipulation/indexed instruction shares, lane/VMU busy fractions
+from the default engine metrics, and the mshrs=1 slowdown.
+
+**Mechanistic** (PR 10): the ``collect_stats`` cycle attribution
+(``repro.core.telemetry``) — per-module fractions of where the cycles
+actually went, per app, plus the same profile at mshrs=1.
+
+The consistency gate cross-checks them for all 10 apps; any mismatch is a
+loud CI failure with the per-module breakdown printed:
+
+  * ``exec_interconnect`` visible cycles > 0  <=>  manip_share > 0
+  * ``dep_scalar`` coupling cycles > 0        <=>  app in scalar_comm
+  * mshr_bound apps: memory fraction jumps > 0.3 under mshrs=1 and memory
+    becomes the top bottleneck; every other app moves < 0.02
+  * mechanistic top bottleneck is allowed by the differential busy
+    fractions (lanes/memory dominance at the same config)
 
     PYTHONPATH=src python benchmarks/module_stress.py
 """
@@ -14,12 +28,12 @@ import sys
 import numpy as np
 
 from repro.core import engine as eng
-from repro.core import isa, tracegen
+from repro.core import isa, telemetry, tracegen
 
 # paper Table 2 rows we can check quantitatively (extended with the three
 # frontend-derived ML workloads):
 #   interconnect-heavy (slides/reductions): jacobi-2d, pathfinder,
-#       canneal/streamcluster/swaptions (reductions), the attention kernels
+#       canneal/streamcluster (reductions), the attention kernels
 #       (online-softmax + dot reductions), ssd_scan (cumsum slide ladder)
 #   indexed memory: canneal
 #   intensive scalar-core communication: canneal, particlefilter,
@@ -70,14 +84,86 @@ def shares(app_name: str, mvl=64) -> dict:
     return shares_all([app_name], mvl)[app_name]
 
 
+def mechanistic_all(app_names, mvl=64) -> dict:
+    """Cycle-attribution profile per app at the Table-2 config and its
+    mshrs=1 ablation: module fractions, top bottleneck, coupling and
+    interconnect visible cycles — ``telemetry.profile_app`` rows."""
+    cfg = eng.VectorEngineConfig(mvl=mvl, lanes=4)
+    cfg_m1 = eng.VectorEngineConfig(mvl=mvl, lanes=4, mshrs=1)
+    rows = {}
+    for a in app_names:
+        r = telemetry.profile_app(a, cfg, tiles=16)
+        r1 = telemetry.profile_app(a, cfg_m1, tiles=16)
+        rows[a] = {"default": r, "mshr1": r1,
+                   "mem_jump": (r1["modules"]["memory"]
+                                - r["modules"]["memory"])}
+    return rows
+
+
+def _allowed_tops(diff_row: dict) -> set[str]:
+    """Which top bottleneck the *differential* busy fractions admit: any
+    module whose unit is busy >50% of the time; if nothing dominates, the
+    busier of lanes/memory."""
+    allowed = set()
+    if diff_row["lane_busy_frac"] > 0.5:
+        allowed.add("lanes")
+    if diff_row["vmu_busy_frac"] > 0.5:
+        allowed.add("memory")
+    if not allowed:
+        allowed.add("lanes" if diff_row["lane_busy_frac"]
+                    >= diff_row["vmu_busy_frac"] else "memory")
+    return allowed
+
+
+def check_consistency(diff: dict, mech: dict) -> list[str]:
+    """Cross-check the differential matrix against the mechanistic
+    attribution; returns a list of mismatch descriptions (empty = agree)."""
+    bad = []
+    for a in diff:
+        d, m = diff[a], mech[a]
+        stalls = m["default"]["stalls"]
+        intc = stalls["exec_interconnect"]
+        if (intc > 0) != (d["manip_share"] > 0):
+            bad.append(f"{a}: interconnect visible={intc:.0f} vs "
+                       f"manip_share={d['manip_share']:.2%}")
+        dep = stalls["dep_scalar"]
+        if (dep > 0) != (a in EXPECT["scalar_comm"]):
+            bad.append(f"{a}: dep_scalar visible={dep:.0f} vs "
+                       f"scalar_comm={'yes' if a in EXPECT['scalar_comm'] else 'no'}")
+        if a in EXPECT["mshr_bound"]:
+            if not (m["mem_jump"] > 0.3
+                    and m["mshr1"]["top"] == "memory"):
+                bad.append(f"{a}: mshr_bound but mem_jump={m['mem_jump']:.3f}"
+                           f" top@mshr1={m['mshr1']['top']}")
+        elif abs(m["mem_jump"]) > 0.02:
+            bad.append(f"{a}: not mshr_bound but mem_jump={m['mem_jump']:.3f}")
+        allowed = _allowed_tops(d)
+        if m["default"]["top"] not in allowed:
+            bad.append(f"{a}: mechanistic top={m['default']['top']} but busy "
+                       f"fractions admit {sorted(allowed)}")
+    return bad
+
+
 def main() -> None:
-    rows = shares_all(list(tracegen.APPS))
+    apps = list(tracegen.APPS)
+    rows = shares_all(apps)
+    mech = mechanistic_all(apps)
     print(f"{'app':16s} {'manip%':>7s} {'indexed%':>9s} {'dep/body':>9s} "
           f"{'vmu busy':>9s} {'lane busy':>10s} {'mshr1 x':>8s}")
     for a, r in rows.items():
         print(f"{a:16s} {r['manip_share']:7.1%} {r['indexed_share']:9.1%} "
               f"{r['dep_scalar_per_body']:9.0f} {r['vmu_busy_frac']:9.2f} "
               f"{r['lane_busy_frac']:10.2f} {r['mshr1_slowdown']:8.2f}")
+    print("\nmechanistic attribution (fraction of runtime per module):")
+    print(f"{'app':16s} {'top':10s} "
+          + " ".join(f"{m:>7s}" for m in telemetry.MODULES)
+          + f" {'mem@mshr1':>10s}")
+    for a in apps:
+        r = mech[a]["default"]
+        print(f"{a:16s} {r['top']:10s} "
+              + " ".join(f"{r['modules'][m]:7.3f}" for m in telemetry.MODULES)
+              + f" {mech[a]['mshr1']['modules']['memory']:10.3f}")
+
     ok = True
     for a in EXPECT["interconnect"]:
         ok &= rows[a]["manip_share"] > 0.0
@@ -93,7 +179,15 @@ def main() -> None:
     for a in set(tracegen.APPS) - EXPECT["scalar_comm"] - {"swaptions"}:
         ok &= rows[a]["dep_scalar_per_body"] == 0
     print("\nTable-2 checkmark matrix:", "CONSISTENT" if ok else "MISMATCH")
-    sys.exit(0 if ok else 1)
+
+    bad = check_consistency(rows, mech)
+    if bad:
+        print("\nmechanistic <-> differential MISMATCH:")
+        for line in bad:
+            print(" ", line)
+    else:
+        print("mechanistic <-> differential: CONSISTENT (10/10 apps)")
+    sys.exit(0 if ok and not bad else 1)
 
 
 if __name__ == "__main__":

@@ -26,7 +26,7 @@ def _t(fn, *args, reps=3):
 
 
 # machine-readable results collected while the driver runs; main() writes
-# them to --bench-json (BENCH_pr9.json by default)
+# them to --bench-json (BENCH_pr10.json by default)
 _BENCH: dict = {}
 
 
@@ -140,7 +140,8 @@ def sweep_wallclock(quick: bool = False):
 
 def steady_state_table():
     """Per-app steady-state loop-body times at the reference config — the
-    per-app entry of the bench JSON, one batched dispatch set."""
+    per-app entry of the bench JSON, one batched dispatch set.  PR 10 adds
+    the marginal lane/VMU utilization over the measurement window."""
     from repro.core import engine as eng
     from repro.core import suite, tracegen
     cfg = eng.VectorEngineConfig(mvl=64, lanes=4)
@@ -148,12 +149,66 @@ def steady_state_table():
     bodies = [tracegen.body_for(a, suite.effective_mvl(a, cfg), cfg)
               for a in apps]
     t0 = time.perf_counter()
-    times = eng.steady_state_time_batch(bodies, [cfg] * len(apps))
+    rows = eng.steady_state_time_batch(bodies, [cfg] * len(apps),
+                                       with_util=True)
     us_each = (time.perf_counter() - t0) * 1e6 / len(apps)
-    _BENCH["steady_state_ns"] = {a: t for a, t in zip(apps, times)}
+    _BENCH["steady_state_ns"] = {a: r["steady_ns"]
+                                 for a, r in zip(apps, rows)}
+    _BENCH["steady_state_util"] = {
+        a: {"lane_util": r["lane_util"], "vmu_util": r["vmu_util"]}
+        for a, r in zip(apps, rows)}
     _BENCH["steady_state_config"] = cfg.label()
-    return [(f"steady_state_{a}_{cfg.label()}", us_each, f"{t:.1f}ns")
-            for a, t in zip(apps, times)]
+    return [(f"steady_state_{a}_{cfg.label()}", us_each,
+             f"{r['steady_ns']:.1f}ns|lane_util={r['lane_util']:.3f}"
+             f"|vmu_util={r['vmu_util']:.3f}")
+            for a, r in zip(apps, rows)]
+
+
+def profile_rows(quick: bool = False, timeline_path: str | None = None):
+    """Mechanistic cycle-attribution rows (ISSUE 10): the per-app telemetry
+    scorecard at the reference config (plus the ooo/crossbar corner in full
+    mode) and a committed example Chrome-trace timeline.
+
+    Each row prints the top bottleneck module, the module fractions, and the
+    event-sum identity error (attributed cycles must reconstruct the total
+    runtime to float32 tolerance)."""
+    from repro.core import engine as eng
+    from repro.core import suite, telemetry, tracegen
+    cfgs = [eng.VectorEngineConfig(mvl=64, lanes=4)]
+    if not quick:
+        cfgs.append(eng.VectorEngineConfig(mvl=256, lanes=8, ooo_issue=True,
+                                           interconnect="crossbar"))
+    t0 = time.perf_counter()
+    rep = telemetry.scorecard(cfgs=cfgs)
+    wall = time.perf_counter() - t0
+    us_each = wall * 1e6 / len(rep.rows)
+    worst_ident = max(r["identity_rel_err"] for r in rep.rows)
+    rows = []
+    for r in rep.rows:
+        fracs = "|".join(f"{m}={r['modules'][m]:.3f}"
+                         for m in telemetry.MODULES)
+        rows.append((f"profile_{r['app']}_{r['config']}", us_each,
+                     f"top={r['top']}|{fracs}"
+                     f"|ident_err={r['identity_rel_err']:.1e}"))
+    if timeline_path is None:
+        timeline_path = os.path.join(os.path.dirname(__file__), "..",
+                                     "examples",
+                                     "timeline_blackscholes.json")
+    os.makedirs(os.path.dirname(timeline_path), exist_ok=True)
+    app, cfg = "blackscholes", cfgs[0]
+    body = tracegen.body_for(app, suite.effective_mvl(app, cfg), cfg)
+    doc = telemetry.write_chrome_trace(timeline_path, body.tile(2), cfg,
+                                       label=app)
+    rows.append(("profile_timeline_blackscholes", 0.0,
+                 f"{len(doc['traceEvents'])}events"
+                 f"|{os.path.normpath(timeline_path)}"))
+    _BENCH["profile"] = {
+        "scorecard": rep.to_dict(), "wall_s": wall,
+        "worst_identity_rel_err": worst_ident,
+        "timeline": os.path.normpath(timeline_path),
+        "jit_cache": eng.jit_cache_size(),
+    }
+    return rows
 
 
 def frontend_crossval():
@@ -586,6 +641,12 @@ def main(argv=None) -> None:
                     help="RVV assembly frontend rows only: per-app decode "
                          "wall-clock, asm-vs-hand cross-validation "
                          "verdicts, and asm-variant sweep parity")
+    ap.add_argument("--profile", action="store_true",
+                    help="mechanistic cycle-attribution rows only: the "
+                         "telemetry scorecard (top bottleneck + module "
+                         "fractions + event-sum identity error per app) and "
+                         "the committed example Chrome-trace timeline "
+                         "(examples/timeline_blackscholes.json)")
     ap.add_argument("--serve", action="store_true",
                     help="simulation-service rows only: Poisson arrival "
                          "workload through repro.serve.sim_service — "
@@ -612,12 +673,13 @@ def main(argv=None) -> None:
         help="persistent simulation-service result cache (JSONL)")
     ap.add_argument("--dse-budget-kb", type=float, default=512.0)
     ap.add_argument("--bench-json", default=os.path.join(
-        os.path.dirname(__file__), "..", "BENCH_pr9.json"),
+        os.path.dirname(__file__), "..", "BENCH_pr10.json"),
         help="machine-readable results path (sweep wall-clock, batched "
-             "speedup, per-app steady-state times, crossval verdicts "
-             "incl. the RVV frontend, DSE frontiers + cache stats, "
-             "serving throughput/latency, surrogate train/score/recall, "
-             "scalar-baseline old-vs-new + anchor scorecard)")
+             "speedup, per-app steady-state times + lane/VMU utilization, "
+             "crossval verdicts incl. the RVV frontend, DSE frontiers + "
+             "cache stats, serving throughput/latency, surrogate "
+             "train/score/recall, scalar-baseline old-vs-new + anchor "
+             "scorecard, mechanistic profile scorecard)")
     args = ap.parse_args(argv)
     if args.surrogate:
         fns = (lambda: surrogate_rows(quick=args.quick,
@@ -626,6 +688,8 @@ def main(argv=None) -> None:
         fns = (lambda: dse_study(quick=args.quick,
                                  cache_path=args.dse_cache,
                                  budget_kb=args.dse_budget_kb),)
+    elif args.profile:
+        fns = (lambda: profile_rows(quick=args.quick),)
     elif args.serve:
         fns = (lambda: serve_rows(quick=args.quick,
                                   cache_path=args.serve_cache),)
@@ -638,13 +702,15 @@ def main(argv=None) -> None:
                sweep_llc, sweep_mshr, frontend_crossval,
                lambda: rvv_rows(quick=True),
                lambda: codegen_rows(quick=True), steady_state_table,
-               scalar_rows, lambda: sweep_wallclock(quick=True))
+               scalar_rows, lambda: profile_rows(quick=True),
+               lambda: sweep_wallclock(quick=True))
     else:
         fns = (table_3_to_9_characterization, figures_4_to_10_scalability,
                sweep_llc, sweep_mshr, frontend_crossval,
                lambda: rvv_rows(), lambda: codegen_rows(),
-               steady_state_table, scalar_rows, kernel_microbench,
-               roofline_table, lambda: sweep_wallclock(quick=False))
+               steady_state_table, scalar_rows, lambda: profile_rows(),
+               kernel_microbench, roofline_table,
+               lambda: sweep_wallclock(quick=False))
     print("name,us_per_call,derived")
     for fn in fns:
         for name, us, derived in fn():

@@ -9,7 +9,7 @@ against the persisted cache, which must answer >= 99 % of requests as hits
 with bitwise-identical times.
 
 Standalone: ``python benchmarks/serve_bench.py [--quick] [--cache PATH]``;
-``benchmarks/run.py --serve`` embeds the same study in ``BENCH_pr9.json``.
+``benchmarks/run.py --serve`` embeds the same study in ``BENCH_pr10.json``.
 """
 from __future__ import annotations
 

@@ -17,7 +17,7 @@ python -m pytest --doctest-modules -q -p no:randomly \
   src/repro/core/memory.py src/repro/core/suite.py src/repro/core/dse.py \
   src/repro/core/codegen.py src/repro/serve/sim_service.py \
   src/repro/core/surrogate.py src/repro/core/search.py \
-  src/repro/core/scalar_pipeline.py
+  src/repro/core/scalar_pipeline.py src/repro/core/telemetry.py
 
 echo "== docs gate: README snippets =="
 # extract EVERY ```python fenced block from the README and execute them in
@@ -81,6 +81,20 @@ echo "== serve-smoke gate =="
 serve_tmp="$(mktemp -d)"
 trap 'rm -f "$snippet"; rm -rf "$dse_tmp" "$serve_tmp"' EXIT
 python -m repro.serve.sim_service --smoke --cache "$serve_tmp/cache.jsonl"
+
+echo "== profile-smoke gate =="
+# mechanistic cycle attribution: event-sum identity (attributed cycles
+# reconstruct total runtime) on all 10 apps x 2 configs, collect_stats
+# timing bitwise-identical to the default scan, timeline JSON validity,
+# latency-histogram sanity
+python -m repro.core.telemetry --smoke
+
+echo "== module-stress gate =="
+# paper Table 2 two independent ways: the differential checkmark matrix
+# (static shares + knob ablation) must agree with the mechanistic
+# cycle attribution for all 10 apps — any mismatch prints the per-module
+# breakdown and fails
+python benchmarks/module_stress.py
 
 echo "== quick benchmark smoke =="
 python benchmarks/run.py --quick

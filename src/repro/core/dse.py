@@ -37,6 +37,7 @@ from __future__ import annotations
 import itertools
 import json
 import os
+import time
 import warnings
 from dataclasses import dataclass, fields
 
@@ -434,6 +435,7 @@ def explore(space, apps=None, cache: ResultCache | None = None,
 
     h0, m0 = cache.hits, cache.misses
     model_fp = eng.model_fingerprint()
+    t_key0 = time.perf_counter()
     cells = []                       # (app, cfg, body, key)
     need: dict[str, tuple] = {}      # first (body, cfg) per missing key
     for app in apps:
@@ -443,6 +445,7 @@ def explore(space, apps=None, cache: ResultCache | None = None,
             cells.append((app, cfg, body, key))
             if cache.get(key) is None and key not in need:
                 need[key] = (body, cfg)
+    t_key1 = t_disp1 = time.perf_counter()
     if need:
         times = eng.steady_state_time_batch(
             [b for b, _ in need.values()], [c for _, c in need.values()],
@@ -450,6 +453,7 @@ def explore(space, apps=None, cache: ResultCache | None = None,
         for key, t in zip(need, times):
             cache.put(key, t)
         cache.flush()
+        t_disp1 = time.perf_counter()
 
     records = []
     for app, cfg, body, key in cells:
@@ -461,7 +465,18 @@ def explore(space, apps=None, cache: ResultCache | None = None,
             runtime_ns=runtime,
             speedup=suite.scalar_runtime_ns(app, cfg) / runtime,
             area_kb=area_proxy_kb(cfg)))
+    t_derive1 = time.perf_counter()
     lookups = (cache.hits - h0) + (cache.misses - m0)
+    from repro.core import telemetry
+    phases = [
+        telemetry.snapshot_row("dse.phase", phase="key", wall_s=t_key1 - t_key0,
+                               cells=len(cells), misses=len(need)),
+        telemetry.snapshot_row("dse.phase", phase="dispatch",
+                               wall_s=t_disp1 - t_key1, simulated=len(need)),
+        telemetry.snapshot_row("dse.phase", phase="derive",
+                               wall_s=t_derive1 - t_disp1,
+                               records=len(records)),
+    ]
     stats = {
         "lookups": lookups,
         "disk_or_prior_hits": cache.hits - h0,
@@ -469,6 +484,7 @@ def explore(space, apps=None, cache: ResultCache | None = None,
         "simulated": len(need),
         "hit_rate": (lookups - len(need)) / lookups if lookups else 0.0,
         "devices": _device_count(),
+        "phases": phases,
     }
     return DseResult(space=name, apps=apps, n_configs=len(cfgs),
                      records=records, stats=stats)

@@ -146,6 +146,44 @@ DEFAULT_BRANCH_MISS_PENALTY = 6.0
 FUSION_SIMPLE_SAVE = 0.15      # simple-class cycles removed by macro-op fusion
 
 
+# --------------------------------------------------------------------------
+# cycle attribution (the collect_stats scan variant)
+# --------------------------------------------------------------------------
+# Every stall/execution cause the profiling scan attributes cycles to, in
+# accumulator order.  The attribution is a *frontier decomposition*: the
+# running completion frontier ``F = max(t_scalar, last_commit)`` is monotone,
+# and each scan step's advance ``F_new - F_old`` is split into the wait that
+# delayed issue (attributed to the binding constraint — the argmax of the
+# issue equation), the execution time visible beyond the frontier (attributed
+# to the executing module), and scalar-pipe work.  Summing the accumulators
+# therefore reconstructs ``time`` exactly (float32 association aside) — the
+# event-sum identity ``python -m repro.core.telemetry --smoke`` enforces.
+STALL_KINDS = (
+    "scalar_work",   # scalar-block work + scalar pipe carrying vector instrs
+    "dep_scalar",    # visible cycles of scalar blocks consuming a vector->
+                     # scalar result (coupling round-trips on critical path)
+    "dispatch",      # issue gated by the scalar frontier + dispatch latency
+    "rob_full",      # structural: no free ROB entry
+    "phys_full",     # structural: no free physical (rename) register
+    "aq_full",       # structural: arithmetic issue queue full
+    "mq_full",       # structural: memory issue queue full
+    "raw",           # RAW wait on a vector register operand
+    "lane_wait",     # lane FU busy with an earlier arithmetic instruction
+    "vmu_wait",      # VMU busy with an earlier memory instruction
+    "inorder",       # in-order issue gate (older instr not yet issued)
+    "exec_simple",   # visible execution: VARITH per FU class
+    "exec_mul",
+    "exec_div",
+    "exec_trans",
+    "exec_interconnect",  # visible execution: slides / reductions
+    "exec_mask",          # visible execution: vfirst/vpopc mask->scalar
+    "exec_move",          # visible execution: whole-register moves
+    "exec_mem",           # visible execution: memory access (VMU) cycles
+)
+N_STALL = len(STALL_KINDS)
+_S = {k: i for i, k in enumerate(STALL_KINDS)}
+
+
 def _ring_read(ring, count, capacity):
     """Time at which the slot for the `count`-th allocation frees (0 if never
     yet full): value written `capacity` allocations ago."""
@@ -157,13 +195,20 @@ def _ring_write(ring, count, value):
     return ring.at[jnp.mod(count, MAX_RING)].set(value)
 
 
-def _make_step(params):
+def _make_step(params, collect: bool = False):
     """Build the per-instruction scan step for one parameter vector.
 
     Everything configuration-dependent — including the formerly-static
     ``ooo``/``ring`` flags — is a traced value, so a single compiled
     executable serves every config and the step vmaps cleanly over a batch
     axis (``simulate_batch``).
+
+    ``collect`` (a Python-level flag, resolved at trace time) appends the
+    cycle-attribution accumulators (``STALL_KINDS`` vector + per-FU lane
+    occupancy) to the carry and emits per-record ``(start, issue, complete,
+    cause)`` outputs for timeline export.  With ``collect=False`` the traced
+    jaxpr is the pre-profiler one — the default path stays bitwise-identical
+    and keyed on the same executables.
     """
     (lanes, phys_extra, rob_entries, q_entries, read_ports, line_elems,
      mem_ports, lat_l1, lat_l2, lat_dram, scalar_scale, dispatch_lat,
@@ -174,9 +219,15 @@ def _make_step(params):
     elem_cost = jnp.asarray(VEC_ELEM_CYCLES)
 
     def step(carry, x):
-        (reg_ready, rob_ring, n_rob, phys_ring, n_phys, aq_ring, n_aq,
-         mq_ring, n_mq, t_scalar, lane_free, vmu_free, last_aq, last_mq,
-         last_commit, scalar_res, busy_lane, busy_vmu) = carry
+        if collect:
+            (reg_ready, rob_ring, n_rob, phys_ring, n_phys, aq_ring, n_aq,
+             mq_ring, n_mq, t_scalar, lane_free, vmu_free, last_aq, last_mq,
+             last_commit, scalar_res, busy_lane, busy_vmu,
+             stall_acc, occ_fu) = carry
+        else:
+            (reg_ready, rob_ring, n_rob, phys_ring, n_phys, aq_ring, n_aq,
+             mq_ring, n_mq, t_scalar, lane_free, vmu_free, last_aq, last_mq,
+             last_commit, scalar_res, busy_lane, busy_vmu) = carry
         kind, vl, fu, n_src, src1, src2, dst, mpat, fp_kb, s_count, dep = x
 
         vlf = vl.astype(jnp.float32)
@@ -283,7 +334,68 @@ def _make_step(params):
             busy_lane + jnp.where(is_scalar | is_mem, 0.0, startup + exec_c),
             busy_vmu + jnp.where(is_mem, startup + exec_c, 0.0),
         )
-        return carry_n, None
+        if not collect:
+            return carry_n, None
+
+        # ---- cycle attribution (collect_stats only) -------------------------
+        # Frontier decomposition: F = max(t_scalar, last_commit) is monotone;
+        # this step advances it by delta = F_new - F_old, which is split
+        # exactly (real arithmetic) into wait/exec/scalar pieces below — so
+        # sum(stall_acc) == final time to float32 association tolerance.
+        f_old = jnp.maximum(t_scalar, last_commit)
+        # scalar block: the raw wait on a pending vector->scalar result is
+        # always frontier-hidden (scalar_res <= last_commit <= F), so the
+        # coupling cost surfaces as the dep block's *visible work* — route
+        # it to dep_scalar instead of scalar_work when dep is set
+        dep_vis = jnp.maximum(t_wait - f_old, 0.0)
+        work_vis = jnp.maximum(t_scalar_s - jnp.maximum(t_wait, f_old), 0.0)
+        sc_idx = jnp.where(dep, _S["dep_scalar"], _S["scalar_work"])
+        # vector instruction: issue wait goes to the binding constraint of
+        # the issue equation (structural fulls take precedence on ties, then
+        # operand RAW, FU busy, the in-order gate; scalar-frontier dispatch
+        # is the catch-all — issue is the max of exactly these candidates)
+        cause = jnp.select(
+            [issue == rob_slot, issue == phys_slot, issue == q_slot,
+             issue == ops_ready, issue == fu_free,
+             (ooo_f <= 0) & (issue == inorder)],
+            [jnp.int32(_S["rob_full"]), jnp.int32(_S["phys_full"]),
+             jnp.where(is_mem, _S["mq_full"], _S["aq_full"]),
+             jnp.int32(_S["raw"]),
+             jnp.where(is_mem, _S["vmu_wait"], _S["lane_wait"]),
+             jnp.int32(_S["inorder"])],
+            jnp.int32(_S["dispatch"]))
+        exec_idx = jnp.select(
+            [is_mem,
+             (kind == isa.VSLIDE) | (kind == isa.VREDUCE),
+             kind == isa.VMASK_SCALAR,
+             kind == isa.VMOVE],
+            [jnp.int32(_S["exec_mem"]), jnp.int32(_S["exec_interconnect"]),
+             jnp.int32(_S["exec_mask"]), jnp.int32(_S["exec_move"])],
+            jnp.int32(_S["exec_simple"]) + fu)
+        wait_vis = jnp.maximum(issue - f_old, 0.0)
+        exec_vis = jnp.maximum(complete - jnp.maximum(issue, f_old), 0.0)
+        # scalar pipe running ahead of the engine: visible scalar work
+        tail_vis = jnp.maximum(t_scalar_v - jnp.maximum(complete, f_old), 0.0)
+
+        zero_vec = jnp.zeros((N_STALL,), jnp.float32)
+        sc_delta = (zero_vec.at[_S["dep_scalar"]].add(dep_vis)
+                    .at[sc_idx].add(work_vis))
+        vec_delta = (zero_vec.at[cause].add(wait_vis)
+                     .at[exec_idx].add(exec_vis)
+                     .at[_S["scalar_work"]].add(tail_vis))
+        stall_n = stall_acc + jnp.where(is_scalar, sc_delta, vec_delta)
+        occ_n = occ_fu.at[fu].add(
+            jnp.where(is_scalar | is_mem, 0.0, startup + exec_c))
+
+        # per-record timeline spans: scalar (start, wait-end, work-end);
+        # vector (scalar-commit, issue, complete)
+        ys = (jnp.where(is_scalar, t_scalar, t_scalar_v),
+              jnp.where(is_scalar, t_wait, issue),
+              jnp.where(is_scalar, t_scalar_s, complete),
+              jnp.where(is_scalar,
+                        jnp.where(dep, _S["dep_scalar"], _S["scalar_work"]),
+                        cause).astype(jnp.int32))
+        return carry_n + (stall_n, occ_n), ys
 
     return step
 
@@ -309,10 +421,27 @@ def _metrics(carry) -> dict:
     }
 
 
+def _init_carry_stats():
+    return _init_carry() + (jnp.zeros(N_STALL, jnp.float32),
+                            jnp.zeros(4, jnp.float32))
+
+
 def _scan_core(xs, params):
     """One trace x one config, full-length scan -> timing dict."""
     carry, _ = jax.lax.scan(_make_step(params), _init_carry(), xs)
     return _metrics(carry)
+
+
+def _profile_core(xs, params):
+    """The collect_stats scan: same step arithmetic plus the attribution
+    accumulators and per-record timeline outputs.  One extra jit key total
+    (``_profile_jit``); pure jnp, so it vmaps like the default core."""
+    carry, ys = jax.lax.scan(_make_step(params, collect=True),
+                             _init_carry_stats(), xs)
+    out = _metrics(carry)
+    out["stalls"] = carry[18]
+    out["occ_lane_fu"] = carry[19]
+    return out, ys
 
 
 def _chunk_core(carry, xs, params):
@@ -326,6 +455,7 @@ def _chunk_core(carry, xs, params):
 
 _simulate_jit = jax.jit(_scan_core)
 _chunk_batch_jit = jax.jit(jax.vmap(_chunk_core))
+_profile_jit = jax.jit(_profile_core)
 
 
 _SHARDED_JITS: dict[int, object] = {}
@@ -450,11 +580,36 @@ def config_fingerprint(cfg: VectorEngineConfig) -> str:
     return h.hexdigest()[:16]
 
 
-def simulate(trace: isa.Trace, cfg: VectorEngineConfig) -> dict:
-    """Run the timing model; returns times in vector-engine cycles (=ns)."""
+def simulate(trace: isa.Trace, cfg: VectorEngineConfig,
+             collect_stats: bool = False) -> dict:
+    """Run the timing model; returns times in vector-engine cycles (=ns).
+
+    With ``collect_stats=True`` the profiling scan runs instead (same step
+    arithmetic — ``tests/test_telemetry.py`` pins the timing bitwise-equal)
+    and the result additionally carries:
+
+    * ``stalls``: ``{cause: cycles}`` over ``STALL_KINDS`` — sums to
+      ``time`` (the event-sum identity),
+    * ``occ_lane_fu``: lane-busy cycles per arithmetic FU class,
+    * ``records``: per-record ``start``/``issue``/``complete`` numpy arrays
+      plus the binding-constraint ``cause`` index (timeline export feedstock
+      for ``repro.core.telemetry``).
+    """
     params = tuple(jnp.asarray(p) for p in _cfg_params_np(cfg))
-    out = _simulate_jit(_trace_xs(trace), params)
-    return {k: float(v) for k, v in out.items()}
+    if not collect_stats:
+        out = _simulate_jit(_trace_xs(trace), params)
+        return {k: float(v) for k, v in out.items()}
+    out, ys = _profile_jit(_trace_xs(trace), params)
+    res = {k: float(v) for k, v in out.items()
+           if k not in ("stalls", "occ_lane_fu")}
+    res["stalls"] = {k: float(v) for k, v in
+                     zip(STALL_KINDS, np.asarray(out["stalls"]))}
+    res["occ_lane_fu"] = [float(v) for v in np.asarray(out["occ_lane_fu"])]
+    res["records"] = {
+        "start": np.asarray(ys[0]), "issue": np.asarray(ys[1]),
+        "complete": np.asarray(ys[2]), "cause": np.asarray(ys[3]),
+    }
+    return res
 
 
 def _pow2_bucket(n: int, lo: int = 8) -> int:
@@ -499,6 +654,7 @@ def jit_cache_size() -> int:
     """
     try:
         n = int(_simulate_jit._cache_size() + _chunk_batch_jit._cache_size())
+        n += int(_profile_jit._cache_size())
         n += sum(int(f._cache_size()) for f in _SHARDED_JITS.values())
         return n
     except AttributeError:
@@ -511,9 +667,12 @@ def _run_batch_group(traces: list[isa.Trace], cfgs: list[VectorEngineConfig],
     (repeating the first element), then scan chunk by chunk, carrying the
     engine state between dispatches.
 
-    With ``collect_times`` the running per-lane "time" after every chunk is
-    also returned ([n_chunks, B]) — ``steady_state_time_batch`` uses it to
-    read the warmup checkpoint out of the middle of a single fused scan.
+    With ``collect_times`` the running per-lane "time" plus the lane/VMU
+    busy accumulators after every chunk are also returned (each
+    [n_chunks, B]) — ``steady_state_time_batch`` reads the warmup checkpoint
+    out of the middle of a single fused scan, and the busy checkpoints give
+    marginal steady-state utilization for free (reads of the same carry the
+    timing dispatch produces anyway, so timing stays bitwise-identical).
     """
     b = len(traces)
     bb = _pow2_bucket(b)
@@ -523,16 +682,21 @@ def _run_batch_group(traces: list[isa.Trace], cfgs: list[VectorEngineConfig],
     params = tuple(jnp.asarray(np.stack(col)) for col in cols)
     carry = jax.tree.map(
         lambda a: jnp.zeros((bb,) + a.shape, a.dtype), _init_carry())
-    times = []
+    times, busy_l, busy_v = [], [], []
     for i in range(length // CHUNK):
         xs = tuple(jnp.asarray(a[:, i * CHUNK:(i + 1) * CHUNK]) for a in xs_np)
         carry = _dispatch_chunk_batch(carry, xs, params, bb)
         if collect_times:
             times.append(jnp.maximum(carry[9], carry[14]))
+            busy_l.append(carry[16])
+            busy_v.append(carry[17])
     out = {k: np.asarray(v) for k, v in _metrics(carry).items()}
     rows = [{k: float(v[i]) for k, v in out.items()} for i in range(b)]
     if collect_times:
-        return rows, np.stack([np.asarray(t) for t in times])
+        return (rows,
+                np.stack([np.asarray(t) for t in times]),
+                np.stack([np.asarray(t) for t in busy_l]),
+                np.stack([np.asarray(t) for t in busy_v]))
     return rows
 
 
@@ -587,7 +751,8 @@ def steady_state_time(body: isa.Trace, cfg: VectorEngineConfig,
 
 
 def steady_state_time_batch(bodies, cfgs, warmup: int = 8,
-                            measure: int = 24) -> list[float]:
+                            measure: int = 24,
+                            with_util: bool = False) -> list:
     """Batched ``steady_state_time``: every (body, config) pair in a handful
     of chunked dispatches.
 
@@ -597,6 +762,12 @@ def steady_state_time_batch(bodies, cfgs, warmup: int = 8,
     warmup time is read from the running per-chunk checkpoint, and the
     measurement tiles continue in the same scan — bitwise identical to the
     sequential two-simulation recipe at ~60% of the steps.
+
+    With ``with_util`` each entry is a dict ``{"steady_ns", "lane_util",
+    "vmu_util"}`` — the utilizations are *marginal* over the measurement
+    window (busy cycles accumulated past the warmup checkpoint / wall
+    cycles of the window), read from the same carry, so requesting them
+    never perturbs the timing.
     """
     bodies, cfgs = _broadcast_pairs(bodies, cfgs, noun="bodies")
     if not bodies:
@@ -607,14 +778,25 @@ def steady_state_time_batch(bodies, cfgs, warmup: int = 8,
         wlen = _len_bucket(len(warm))
         traces.append(warm.pad_to(wlen).concat(body.tile(measure)))
         w_chunks.append(wlen // CHUNK)
-    out: list[float] = [0.0] * len(traces)
+    out: list = [0.0] * len(traces)
     for length, idxs in sorted(_group_by_length_bucket(traces).items()):
-        rows, times = _run_batch_group(
+        rows, times, busy_l, busy_v = _run_batch_group(
             [traces[i] for i in idxs], [cfgs[i] for i in idxs], length,
             collect_times=True)
         for lane, i in enumerate(idxs):
             t1 = float(times[w_chunks[i] - 1, lane])
-            out[i] = (rows[lane]["time"] - t1) / measure
+            steady = (rows[lane]["time"] - t1) / measure
+            if not with_util:
+                out[i] = steady
+                continue
+            wall = max(rows[lane]["time"] - t1, 1e-9)
+            out[i] = {
+                "steady_ns": steady,
+                "lane_util": (rows[lane]["lane_busy"]
+                              - float(busy_l[w_chunks[i] - 1, lane])) / wall,
+                "vmu_util": (rows[lane]["vmu_busy"]
+                             - float(busy_v[w_chunks[i] - 1, lane])) / wall,
+            }
     return out
 
 

@@ -224,11 +224,15 @@ def search(space, apps, model, cache: dse.ResultCache | None = None,
     Deterministic in (space, apps, model parameters, seed): repeat calls
     produce bitwise-identical frontiers, simulated or cached.
     """
+    import time as _time
+
+    from repro.core import telemetry
     apps = tuple(apps)
     cache = cache if cache is not None else dse.ResultCache()
     total = space.size()
     radices = [len(c) for _, c in space.axes]
     scorers = {app: surro.SpaceScorer(model, space, app) for app in apps}
+    _t0 = _time.perf_counter()
 
     per_app_idx: dict[str, np.ndarray] = {}
     n_scored = 0
@@ -281,10 +285,13 @@ def search(space, apps, model, cache: dse.ResultCache | None = None,
     # closing the few-percent gaps that surrogate noise (winner's curse:
     # the predicted-best of thousands of near-ties is the most
     # *under*-predicted, not the fastest) leaves behind.
+    _t_score = _time.perf_counter()
     records: dict[str, list] = {}
     frontiers: dict[str, list] = {}
     resim_stats: dict[str, dict] = {}
+    _t_resim = _t_refine = 0.0
     for app in apps:
+        _ta = _time.perf_counter()
         seen_idx = np.unique(per_app_idx[app].astype(np.int64))
         cfgs = [space.config_at(int(i)) for i in seen_idx]
         idx_of = {c: int(i) for c, i in zip(cfgs, seen_idx)}
@@ -294,6 +301,8 @@ def search(space, apps, model, cache: dse.ResultCache | None = None,
         simulated = res.stats["simulated"]
         frontier = dse.pareto_frontier(recs)
         refined = 0
+        _tb = _time.perf_counter()
+        _t_resim += _tb - _ta
         for _ in range(refine_rounds):
             f_idx = np.asarray(sorted(idx_of[r.cfg] for r in frontier),
                                np.int64)
@@ -319,6 +328,20 @@ def search(space, apps, model, cache: dse.ResultCache | None = None,
         frontiers[app] = frontier
         resim_stats[app] = {"resim": int(len(seen_idx)), "refined": refined,
                             "simulated": simulated}
+        _t_refine += _time.perf_counter() - _tb
+    phases = [
+        telemetry.snapshot_row("search.phase", phase="score",
+                               wall_s=_t_score - _t0, mode=mode,
+                               n_scored=n_scored),
+        telemetry.snapshot_row("search.phase", phase="resim",
+                               wall_s=_t_resim,
+                               simulated=sum(r["simulated"]
+                                             for r in resim_stats.values())),
+        telemetry.snapshot_row("search.phase", phase="refine",
+                               wall_s=_t_refine,
+                               refined=sum(r["refined"]
+                                           for r in resim_stats.values())),
+    ]
     stats = {
         "mode": mode,
         "space_size": total,
@@ -327,6 +350,7 @@ def search(space, apps, model, cache: dse.ResultCache | None = None,
         "max_resim_per_app": max_resim_per_app,
         "refine_rounds": refine_rounds,
         "resim": resim_stats,
+        "phases": phases,
     }
     return SearchResult(space=space.name, apps=apps, records=records,
                         frontiers=frontiers, stats=stats)

@@ -102,23 +102,54 @@ def speedup_batch(pairs: list[tuple[str, eng.VectorEngineConfig]]) -> list[float
             for (a, c), b, pc in zip(pairs, bodies, per_chunk)]
 
 
+def speedup_util_batch(
+        pairs: list[tuple[str, eng.VectorEngineConfig]]) -> list[dict]:
+    """``speedup_batch`` plus the lane/VMU utilization the engine carry was
+    already accumulating (and every caller used to drop): one row dict per
+    pair with ``speedup``, ``lane_util``, ``vmu_util``.  Utilization is
+    marginal over the steady-state measurement window, read from the same
+    fused scan — the speedups are bitwise-identical to ``speedup_batch``.
+
+    >>> r = speedup_util_batch(
+    ...     [("blackscholes", eng.VectorEngineConfig(mvl=64, lanes=4))])[0]
+    >>> sorted(r) == ['lane_util', 'speedup', 'vmu_util']
+    True
+    >>> 0.0 <= r["vmu_util"] <= 1.0 and r["lane_util"] > 0.1
+    True
+    """
+    bodies = [tracegen.body_for(a, effective_mvl(a, c), c) for a, c in pairs]
+    rows = eng.steady_state_time_batch(bodies, [c for _, c in pairs],
+                                       with_util=True)
+    return [{
+        "speedup": scalar_runtime_ns(a, c) / vector_runtime_from_per_chunk(
+            a, c, b, r["steady_ns"]),
+        "lane_util": r["lane_util"],
+        "vmu_util": r["vmu_util"],
+    } for (a, c), b, r in zip(pairs, bodies, rows)]
+
+
 def sweep(app_name: str, mvls=(8, 16, 32, 64, 128, 256), lanes=(1, 2, 4, 8),
-          **overrides) -> dict:
-    """The paper's 24-configuration sweep (Table 10), batched."""
+          utilization: bool = False, **overrides) -> dict:
+    """The paper's 24-configuration sweep (Table 10), batched.
+
+    Cell values are speedups; with ``utilization=True`` each cell is instead
+    a row dict ``{"speedup", "lane_util", "vmu_util"}`` (same speedups —
+    the utilization columns ride the same fused scan)."""
     grid = [(m, l) for m in mvls for l in lanes]
     pairs = [(app_name, eng.VectorEngineConfig(mvl=m, lanes=l, **overrides))
              for m, l in grid]
-    return dict(zip(grid, speedup_batch(pairs)))
+    vals = speedup_util_batch(pairs) if utilization else speedup_batch(pairs)
+    return dict(zip(grid, vals))
 
 
 def sweep_all(apps=None, mvls=(8, 16, 32, 64, 128, 256), lanes=(1, 2, 4, 8),
-              **overrides) -> dict:
+              utilization: bool = False, **overrides) -> dict:
     """Full paper study — every app x the 24-config grid — in one batch."""
     apps = list(apps) if apps is not None else sorted(tracegen.APPS)
     grid = [(m, l) for m in mvls for l in lanes]
     pairs = [(a, eng.VectorEngineConfig(mvl=m, lanes=l, **overrides))
              for a in apps for m, l in grid]
-    flat = speedup_batch(pairs)
+    flat = speedup_util_batch(pairs) if utilization else speedup_batch(pairs)
     return {a: dict(zip(grid, flat[i * len(grid):(i + 1) * len(grid)]))
             for i, a in enumerate(apps)}
 

@@ -51,7 +51,7 @@ import numpy as np
 
 from repro.core import dse
 from repro.core import engine as eng
-from repro.core import isa, suite, tracegen
+from repro.core import isa, suite, telemetry, tracegen
 
 
 # --------------------------------------------------------------------------
@@ -122,7 +122,7 @@ class SimService:
                  max_batch: int = 32, max_wait_s: float = 0.05,
                  max_queue: int = 128, overflow: str = "serialize",
                  warmup: int = 8, measure: int = 24,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter, snapshot_every: int = 0):
         if overflow not in ("serialize", "shed"):
             raise ValueError(f"overflow={overflow!r}: 'serialize' or 'shed'")
         if max_batch < 1 or max_queue < 1:
@@ -152,6 +152,12 @@ class SimService:
         self.n_serialized = 0     # overflow-forced inline flushes
         self.n_batches = 0
         self.recompiles = 0       # jit-cache growth across dispatches
+        # bounded log-spaced latency histogram: percentiles (incl. p99.9)
+        # without retaining per-request records; plus optional periodic
+        # stats snapshots (telemetry.SCHEMA rows) every N completions
+        self.lat_hist = telemetry.LatencyHistogram()
+        self.snapshot_every = snapshot_every
+        self.snapshots: list[dict] = []
 
     # ---- keying ----------------------------------------------------------
 
@@ -300,13 +306,18 @@ class SimService:
             latency_s=max(t_done - req.t_arrival, 0.0), batch_id=batch_id)
         self.completed.append(res)
         self._results[req.uid] = res
+        self.lat_hist.add(res.latency_s)
+        if self.snapshot_every and not len(self.completed) % self.snapshot_every:
+            self.snapshots.append(telemetry.snapshot_row(
+                "serve.snapshot", t=t_done, **self.stats()))
         return res
 
     def result_for(self, uid: int) -> SimResult | None:
         return self._results.get(uid)
 
     def stats(self) -> dict:
-        """Counter snapshot (JSON-able)."""
+        """Counter snapshot (JSON-able), including the bounded latency
+        histogram with its p50/p99/p99.9 estimates."""
         return {
             "requests": self.n_requests, "hits": self.n_hits,
             "coalesced": self.n_coalesced, "dispatched": self.n_dispatched,
@@ -316,6 +327,7 @@ class SimService:
             "hit_fraction": self.n_hits / self.n_requests
             if self.n_requests else 0.0,
             "cache_entries": len(self.cache),
+            "latency": self.lat_hist.to_dict(),
         }
 
 
@@ -364,6 +376,7 @@ class ServeReport:
     throughput_rps: float       # sustained completed-requests/sec
     p50_ms: float
     p99_ms: float
+    p999_ms: float              # from the bounded histogram, not raw records
     mean_ms: float
     hits: int
     coalesced: int
@@ -372,13 +385,14 @@ class ServeReport:
     shed: int
     recompiles: int
     hit_fraction: float
+    latency_hist: dict          # telemetry.LatencyHistogram row (this run)
     results: list               # [SimResult] in completion order
 
     def to_dict(self) -> dict:
         d = {k: getattr(self, k) for k in (
-            "n", "wall_s", "throughput_rps", "p50_ms", "p99_ms", "mean_ms",
-            "hits", "coalesced", "dispatched", "batches", "shed",
-            "recompiles", "hit_fraction")}
+            "n", "wall_s", "throughput_rps", "p50_ms", "p99_ms", "p999_ms",
+            "mean_ms", "hits", "coalesced", "dispatched", "batches", "shed",
+            "recompiles", "hit_fraction", "latency_hist")}
         return d
 
 
@@ -396,6 +410,7 @@ def run_workload(service: SimService, arrivals, realtime: bool = False
     arrivals = list(arrivals)
     n0 = len(service.completed)
     s0 = service.stats()
+    h0 = service.lat_hist.snapshot()
     t0 = service.clock()
     if realtime:
         for a in arrivals:
@@ -420,12 +435,14 @@ def run_workload(service: SimService, arrivals, realtime: bool = False
     s1 = service.stats()
     results = service.completed[n0:]
     lat = np.array([r.latency_s for r in results]) if results else np.zeros(1)
+    hist = service.lat_hist.since(h0)   # just this run's completions
     n_done = len(results)
     return ServeReport(
         n=len(arrivals), wall_s=wall,
         throughput_rps=n_done / wall if wall > 0 else float("inf"),
         p50_ms=float(np.percentile(lat, 50)) * 1e3,
         p99_ms=float(np.percentile(lat, 99)) * 1e3,
+        p999_ms=hist.percentile(0.999) * 1e3,
         mean_ms=float(lat.mean()) * 1e3,
         hits=s1["hits"] - s0["hits"],
         coalesced=s1["coalesced"] - s0["coalesced"],
@@ -434,6 +451,7 @@ def run_workload(service: SimService, arrivals, realtime: bool = False
         shed=s1["shed"] - s0["shed"],
         recompiles=s1["recompiles"] - s0["recompiles"],
         hit_fraction=(s1["hits"] - s0["hits"]) / max(len(arrivals), 1),
+        latency_hist=hist.to_dict(),
         results=results)
 
 
